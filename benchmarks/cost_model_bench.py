@@ -1,0 +1,113 @@
+"""Paper tables 16-18: cost-model training data, fit, and inference.
+
+* build_sim_training_table — the paper's ~200-case training set, regenerated
+  from our simulator (best block size per (G, T, R, W, C) grid point);
+* fit_on_paper_rows       — train on the paper's published example rows and
+  report the final loss vs the paper's own weights (274/case on these rows);
+* fit_on_sim_table        — the full reproduction: train on simulator data,
+  report per-case loss and the paper-style inferred-B table.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import atomic_sim as sim
+from repro.core import cost_model as cm
+from repro.core.topology import AMD3970X, GOLD5225R, W3225R
+
+
+def build_sim_training_table(seeds: int = 2,
+                             extended: bool = False) -> np.ndarray:
+    """Rows (G*100, T, log2 R, log2 W, log1024 C[, log2 L, log2 BW], best_B)
+    from the sim.  extended=True appends the paper's FUTURE-WORK platform
+    features (cross-group FAA latency, DRAM bandwidth)."""
+    rows = []
+    grid = []
+    for topo, threads in ((W3225R, (2, 4, 8)),
+                          (GOLD5225R, (4, 16, 24, 48)),
+                          (AMD3970X, (8, 16, 32))):
+        for t in threads:
+            for rp in (6, 10, 12):
+                for wp in (6, 10, 14):
+                    for cp in (1, 3, 6):
+                        grid.append((topo, t, 2 ** rp, 2 ** wp, 1024 ** cp))
+    for topo, t, r, w, c in grid:
+        task = sim.UnitTask(r, w, c)
+        best = sim.best_block_size(topo, t, task, seeds=seeds)
+        g = topo.groups_used(t)
+        f = cm.WorkloadFeatures(g, t, r, w, c)
+        feats = (f.normalized_ext(topo.r_cross_group, topo.bw_bytes_per_clock)
+                 if extended else f.normalized())
+        rows.append(list(feats) + [best])
+    return np.asarray(rows, np.float32)
+
+
+def fit_on_paper_rows() -> list[dict]:
+    x, y = cm.paper_normalized_features(cm.PAPER_INFERENCE_ROWS)
+    t0 = time.time()
+    params, losses = cm.train_cost_model(x, y, steps=20_000, restarts=16)
+    dt = time.time() - t0
+    import jax.numpy as jnp
+    paper_pred = np.asarray(cm.predict(
+        {k: jnp.asarray(v) for k, v in cm.PAPER_WEIGHTS.items()},
+        jnp.asarray(x)))
+    paper_loss = float(np.sum((paper_pred - y) ** 2)) / len(x)
+    ours = float(losses[-1]) / len(x)
+    return [{"table": "cost_model_fit_paper_rows",
+             "ours_loss_per_case": round(ours, 2),
+             "paper_weights_loss_per_case": round(paper_loss, 2),
+             "train_seconds": round(dt, 2),
+             "paper_train_hours": 30.0}]
+
+
+def fit_on_sim_table() -> list[dict]:
+    data = build_sim_training_table()
+    x, y = data[:, :5], data[:, 5]
+    t0 = time.time()
+    params, losses = cm.train_cost_model(x, y, steps=20_000, restarts=16)
+    dt = time.time() - t0
+    per_case = float(losses[-1]) / len(x)
+    # install as framework default (the "retrained on this system" weights)
+    # — the downstream Taskflow comparison deploys THESE, exactly as the
+    # paper deploys weights trained on its own platforms' sweeps.
+    cm.set_default_params(params)
+    import jax.numpy as jnp
+    pred = np.asarray(cm.predict(
+        {k: jnp.asarray(v) for k, v in params.items()}, jnp.asarray(x)))
+    rows = [{"table": "cost_model_fit_sim",
+             "cases": len(x), "loss_per_case": round(per_case, 2),
+             "train_seconds": round(dt, 2)}]
+    # paper-style inference examples (first 12 rows)
+    for i in range(0, min(12, len(x))):
+        rows.append({
+            "table": "cost_model_inferred_sim",
+            "G": int(x[i, 0]), "T": int(x[i, 1]), "R": int(x[i, 2]),
+            "W": int(x[i, 3]), "C": round(float(x[i, 4]), 1),
+            "B_best": int(y[i]), "B_inferred": int(round(float(pred[i])))})
+    return rows
+
+
+def fit_extended_features() -> list[dict]:
+    """The paper's FUTURE WORK, implemented: add cache-latency and
+    bandwidth platform features to the denominator and compare fits on the
+    identical workload grid."""
+    base = build_sim_training_table()
+    ext = build_sim_training_table(extended=True)
+    _, l_base = cm.train_cost_model(base[:, :-1], base[:, -1],
+                                    steps=20_000, restarts=16)
+    _, l_ext = cm.train_cost_model(ext[:, :-1], ext[:, -1],
+                                   steps=20_000, restarts=16)
+    return [{
+        "table": "cost_model_future_work",
+        "cases": len(base),
+        "base_loss_per_case": round(float(l_base[-1]) / len(base), 2),
+        "extended_loss_per_case": round(float(l_ext[-1]) / len(ext), 2),
+        "improvement_pct": round(100 * (1 - float(l_ext[-1])
+                                        / max(float(l_base[-1]), 1e-9)), 1),
+    }]
+
+
+ALL = [fit_on_paper_rows, fit_on_sim_table, fit_extended_features]

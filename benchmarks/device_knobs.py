@@ -1,0 +1,98 @@
+"""Device-side block-size U-curves — the paper's law on the TPU knobs.
+
+These measure REAL wall time on this host (CPU backend) for the pure-JAX
+chunked implementations, sweeping the chunk/block knob the cost model
+controls.  The U-curve (too-small chunks pay per-chunk overhead, too-large
+chunks lose cache/vector efficiency) is the device analogue of the paper's
+tables; on TPU the same knobs feed the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.models import attention as A
+from repro.models import ssm
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def attention_chunk_ucurve() -> list[dict]:
+    b, s, hq, hkv, d = 2, 2048, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    rows = []
+    fns = {}
+    for bk in (8, 16, 32, 64, 128, 256, 512, 1024, 2048):
+        fns[bk] = jax.jit(lambda q, k, v, bk=bk: A.chunked_attention(
+            q, k, v, causal=True, block_k=bk))
+        us = _time(fns[bk], q, k, v)
+        rows.append({"table": "device_attention_chunk_ucurve",
+                     "block_k": bk, "us_per_call": int(us)})
+    best = min(rows, key=lambda r: r["us_per_call"])
+    rows.append({"table": "device_attention_chunk_best",
+                 "block_k": best["block_k"],
+                 "autotuner_choice":
+                     autotune.attention_block_sizes(s, s, d).block_k})
+    return rows
+
+
+def ssd_chunk_ucurve() -> list[dict]:
+    cfg = ssm.SSMConfig(d_model=256, d_state=64, headdim=32, expand=2)
+    p = ssm.ssm_init(jax.random.PRNGKey(0), cfg)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (2, 2048, 256))
+    rows = []
+    for chunk in (16, 32, 64, 128, 256, 512):
+        fn = jax.jit(lambda p, x, c=chunk: ssm.ssm_apply(p, cfg, x,
+                                                         chunk=c)[0])
+        us = _time(fn, p, x)
+        rows.append({"table": "device_ssd_chunk_ucurve",
+                     "chunk": chunk, "us_per_call": int(us)})
+    best = min(rows, key=lambda r: r["us_per_call"])
+    rows.append({"table": "device_ssd_chunk_best", "chunk": best["chunk"],
+                 "autotuner_choice": autotune.ssd_chunk_size(
+                     2048, headdim=32, d_state=64)})
+    return rows
+
+
+def host_parallel_for_overhead() -> list[dict]:
+    """Real FAA-claim counts and wall time per schedule on this host.
+
+    nproc=1 here, so no parallel speedup is claimable — this measures the
+    scheduling-overhead side of the paper's tradeoff (more claims = more
+    overhead), which is CPU-count-independent."""
+    from repro.core import parallel_for as pf
+    import numpy as np
+    sink = np.zeros(4096, np.int64)
+
+    def task(i):
+        sink[i] += 1
+
+    rows = []
+    for schedule, b in (("static", 0), ("faa", 1), ("faa", 32),
+                        ("faa", 512), ("guided", 0), ("cost_model", 0)):
+        t0 = time.time()
+        calls = pf.parallel_for(task, 4096, n_threads=4, schedule=schedule,
+                                block_size=b or None)
+        us = (time.time() - t0) * 1e6
+        rows.append({"table": "host_parallel_for_overhead",
+                     "schedule": f"{schedule}_b{b}" if b else schedule,
+                     "faa_calls": calls, "us_per_call": int(us)})
+    return rows
+
+
+ALL = [attention_chunk_ucurve, ssd_chunk_ucurve, host_parallel_for_overhead]

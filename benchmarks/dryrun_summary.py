@@ -1,0 +1,38 @@
+"""Roofline summary table from the dry-run records (one row per cell)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def roofline_table() -> list[dict]:
+    rows = []
+    if not RESULTS.exists():
+        return [{"table": "roofline", "note": "run repro.launch.dryrun first"}]
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if not r.get("ok"):
+            rows.append({"table": "roofline", "cell": f.stem,
+                         "error": r.get("error", "?")[:80]})
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "table": "roofline",
+            "cell": f"{r['arch']}|{r['shape']}|{r['mesh']}",
+            "t_compute_ms": round(1e3 * rl["t_compute_s"], 2),
+            "t_memory_ms": round(1e3 * rl["t_memory_s"], 2),
+            "t_collective_ms": round(1e3 * rl["t_collective_s"], 2),
+            "bottleneck": rl["bottleneck"],
+            "useful_flops_ratio": round(rl["useful_flops_ratio"], 3),
+            "roofline_fraction": round(rl["roofline_fraction"], 4),
+            "static_gb_per_dev":
+                round(r["static_bytes_per_device"] / 1e9, 2),
+            "compile_s": round(r["t_compile_s"], 1),
+        })
+    return rows
+
+
+ALL = [roofline_table]

@@ -1,0 +1,75 @@
+"""Benchmark harness — one function per paper table (+ device/roofline
+extras).  Prints CSV rows and writes results/benchmarks/<table>.csv.
+
+    PYTHONPATH=src python -m benchmarks.run             # everything
+    PYTHONPATH=src python -m benchmarks.run --only sim  # one suite
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+import time
+from collections import defaultdict
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "benchmarks"
+
+
+def run_suite(name: str, fns) -> list[dict]:
+    rows = []
+    for fn in fns:
+        t0 = time.time()
+        out = fn()
+        dt = time.time() - t0
+        print(f"# {name}.{fn.__name__}: {len(out)} rows in {dt:.1f}s",
+              file=sys.stderr)
+        rows.extend(out)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="sim | cost | taskflow | device | roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (cost_model_bench, device_knobs, dryrun_summary,
+                            sim_tables, taskflow_compare)
+
+    suites = {
+        "sim": sim_tables.ALL,
+        "cost": cost_model_bench.ALL,
+        "taskflow": taskflow_compare.ALL,
+        "device": device_knobs.ALL,
+        "roofline": dryrun_summary.ALL,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    all_rows = []
+    for name, fns in suites.items():
+        all_rows += run_suite(name, fns)
+
+    # group rows by table name, write one csv per table, print everything
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    by_table = defaultdict(list)
+    for row in all_rows:
+        by_table[row.get("table", "misc")].append(row)
+    for table, rows in by_table.items():
+        keys = sorted({k for r in rows for k in r if k != "table"},
+                      key=lambda k: (k != "block_size", k))
+        path = RESULTS / f"{table}.csv"
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=["table"] + keys,
+                               extrasaction="ignore")
+            w.writeheader()
+            w.writerows(rows)
+        for r in rows:
+            print(",".join(str(r.get(k, "")) for k in ["table"] + keys))
+    print(f"# wrote {len(by_table)} tables to {RESULTS}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

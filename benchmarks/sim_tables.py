@@ -1,0 +1,87 @@
+"""Paper tables 1-15: block-size sweeps on the three simulated platforms.
+
+Each function reproduces one table: latency (clocks) per block size per
+thread count, for the paper's unit-task settings.  The paper's qualitative
+structure — U-shape, best-B trends — is asserted in tests; here we emit the
+full tables for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from repro.core import atomic_sim as sim
+from repro.core.topology import AMD3970X, GOLD5225R, W3225R
+
+BLOCKS = [2 ** i for i in range(11)]
+
+
+def _table(topo, threads, task, name, n=1024, seeds=3):
+    rows = []
+    sweeps = {t: sim.sweep_block_sizes(topo, t, task, n=n,
+                                       block_sizes=BLOCKS, seeds=seeds)
+              for t in threads}
+    for b in BLOCKS:
+        row = {"table": name, "block_size": b}
+        for t in threads:
+            row[f"t{t}"] = int(sweeps[t][b])
+        rows.append(row)
+    # best-B summary line
+    best = {f"best_t{t}": min(sweeps[t], key=sweeps[t].get)
+            for t in threads}
+    rows.append({"table": name + "_best", "block_size": -1, **best})
+    return rows
+
+
+def w3225r_comp_tables():
+    """Paper tables 1-3: W-3225R, unit_comp 1024 / 1024^3 / 1024^4."""
+    out = []
+    for p, label in ((1, "1024"), (3, "1024e3"), (4, "1024e4")):
+        task = sim.UnitTask(1024, 1024, 1024 ** p)
+        out += _table(W3225R, (2, 4, 8), task, f"w3225r_comp{label}")
+    return out
+
+
+def gold_comp_tables():
+    """Paper tables 4-6: Gold 5225R, comp 1024^3 / ^5 / ^6, T=4/8/16."""
+    out = []
+    for p in (3, 5, 6):
+        task = sim.UnitTask(1024, 1024, 1024 ** p)
+        out += _table(GOLD5225R, (4, 8, 16), task, f"gold_comp1024e{p}")
+    return out
+
+
+def gold_coregroup_tables():
+    """Paper tables 7-8: Gold 5225R T=24/36/48 (1 vs 2 sockets)."""
+    out = []
+    for p in (2, 4):
+        task = sim.UnitTask(1024, 1024, 1024 ** p)
+        out += _table(GOLD5225R, (24, 36, 48), task,
+                      f"gold_groups_comp1024e{p}")
+    return out
+
+
+def amd_coregroup_table():
+    """Paper table 9: AMD 3970X T=8/16/32 (2/4/8 CCX groups)."""
+    task = sim.UnitTask(1024, 1024, 1024 ** 4)
+    return _table(AMD3970X, (8, 16, 32), task, "amd_groups_comp1024e4")
+
+
+def gold_read_tables():
+    """Paper tables 10-12: Gold 5225R unit_read 64/256/4096."""
+    out = []
+    for r in (64, 256, 4096):
+        task = sim.UnitTask(r, 1024, 1024 ** 6)
+        out += _table(GOLD5225R, (4, 16, 24), task, f"gold_read{r}")
+    return out
+
+
+def amd_write_tables():
+    """Paper tables 13-15: AMD 3970X unit_write 2^12 / 2^14 / 2^16."""
+    out = []
+    for w in (12, 14, 16):
+        task = sim.UnitTask(1024, 2 ** w, 1024 ** 6)
+        out += _table(AMD3970X, (8, 16, 32), task, f"amd_write2e{w}")
+    return out
+
+
+ALL = [w3225r_comp_tables, gold_comp_tables, gold_coregroup_tables,
+       amd_coregroup_table, gold_read_tables, amd_write_tables]

@@ -1,0 +1,68 @@
+"""The paper's cost model as a live autotuner: measure the block-size
+U-curve on THIS machine and compare against the model's suggestion.
+
+    PYTHONPATH=src python examples/autotune_blocks.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune, cost_model as cm
+from repro.models import attention as A
+
+
+def measure(fn, *args, iters=3):
+    out = fn(*args)
+    out.block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        fn(*args).block_until_ready()
+    return (time.time() - t0) / iters * 1e3  # ms
+
+
+def main():
+    b, s, hq, hkv, d = 2, 2048, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+
+    print("flash-attention block_k U-curve (real wall time, this host):")
+    results = {}
+    for bk in (32, 64, 128, 256, 512, 1024, 2048):
+        fn = jax.jit(lambda q, k, v, bk=bk: A.chunked_attention(
+            q, k, v, causal=True, block_k=bk))
+        ms = measure(fn, q, k, v)
+        results[bk] = ms
+        print(f"  block_k {bk:5d}: {ms:8.1f} ms")
+    best = min(results, key=results.get)
+    tuner = autotune.attention_block_sizes(s, s, d)
+    print(f"measured best: {best}; autotuner (TPU model): "
+          f"bq={tuner.block_q} bk={tuner.block_k} "
+          f"(vmem {tuner.vmem_bytes/1e6:.1f} MB)")
+
+    print("\nParallelFor block size across workloads (paper weights):")
+    for groups, threads, r, w, c in [
+            (1, 8, 1024, 1024, 1024),
+            (1, 8, 1024, 1024, 1024 ** 6),
+            (2, 24, 1024, 1024, 1024 ** 3),
+            (8, 32, 65536, 1024, 1024)]:
+        f = cm.WorkloadFeatures(groups, threads, r, w, c)
+        print(f"  G={groups} T={threads:3d} R={r:6d} W={w:6d} "
+              f"C=2^{int(jnp.log2(float(c)))}: "
+              f"B = {cm.suggest_block_size(f, n=1024)}")
+
+    print("\nTPU knobs for the assigned shapes:")
+    print("  train_4k   microbatches (3B dense):",
+          autotune.microbatch_count(256, grad_bytes=2 * 3.4e9,
+                                    step_flops=6 * 3.4e9 * 4096 * 256))
+    print("  decode_32k split_k:", autotune.decode_split_k(32768))
+    print("  long_500k  split_k:", autotune.decode_split_k(524288))
+    print("  SSD chunk @ 4k/32k/500k:",
+          [autotune.ssd_chunk_size(s) for s in (4096, 32768, 524288)])
+
+
+if __name__ == "__main__":
+    main()

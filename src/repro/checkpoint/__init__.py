@@ -1,0 +1,3 @@
+from repro.checkpoint import checkpoint
+
+__all__ = ["checkpoint"]

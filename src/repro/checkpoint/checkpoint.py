@@ -1,0 +1,155 @@
+"""Sharded checkpointing with elastic remesh on restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000100/
+        MANIFEST.json        {step, keys: {path: {shape, dtype, file}}}
+        <flat-key>.npy       one array per leaf (the "shard" unit)
+        COMMIT               written last — a checkpoint without COMMIT is
+                             torn (crashed mid-save) and ignored on restore
+
+Properties the trainer relies on:
+* atomic-by-rename: data is written into a tmp dir, renamed at the end, then
+  COMMIT is stamped — a preempted save never corrupts the latest checkpoint;
+* async: ``save_async`` snapshots to host memory (jax.device_get) and does
+  file IO on a worker thread, so the train loop loses only the transfer time;
+* elastic: leaves are stored unsharded; ``restore`` device_puts them under
+  ANY target sharding tree (different mesh shape / axis layout than saved).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _treedef_of(tree: Any):
+    return jax.tree_util.tree_structure(tree)
+
+
+def save(tree: Any, directory: str | os.PathLike, step: int) -> Path:
+    """Synchronous sharded save; returns the checkpoint path."""
+    base = Path(directory)
+    base.mkdir(parents=True, exist_ok=True)
+    final = base / f"step_{step:08d}"
+    tmp = base / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(tree)
+    manifest = {"step": step, "keys": {}}
+    for key, arr in flat.items():
+        fname = key.replace("/", "__") + ".npy"
+        np.save(tmp / fname, arr, allow_pickle=False)
+        manifest["keys"][key] = {
+            "shape": list(arr.shape), "dtype": str(arr.dtype), "file": fname}
+    (tmp / "MANIFEST.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    (final / "COMMIT").write_text("ok")
+    return final
+
+
+class AsyncSaver:
+    """Snapshot-then-write saver; at most one save in flight."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[Path] = None
+
+    def save(self, tree: Any, directory, step: int) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
+                                 tree)
+
+        def work():
+            self.last_path = save(host_tree, directory, step)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(directory) -> Optional[int]:
+    base = Path(directory)
+    if not base.exists():
+        return None
+    steps = []
+    for p in base.iterdir():
+        if p.name.startswith("step_") and (p / "COMMIT").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(
+    directory,
+    step: Optional[int] = None,
+    *,
+    like: Any = None,
+    shardings: Any = None,
+) -> tuple[Any, int]:
+    """Restore a tree.  `like` provides the pytree structure (required);
+    `shardings` (optional, same structure) device_puts each leaf under the
+    target sharding — this is the elastic-remesh path: the saved mesh is
+    irrelevant."""
+    base = Path(directory)
+    if step is None:
+        step = latest_step(base)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {base}")
+    d = base / f"step_{step:08d}"
+    manifest = json.loads((d / "MANIFEST.json").read_text())
+    arrays = {k: np.load(d / v["file"]) for k, v in manifest["keys"].items()}
+
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out_leaves = []
+    sh_leaves = (jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+        if shardings is not None else [None] * len(leaves_like))
+    for (path, leaf), sh in zip(leaves_like, sh_leaves):
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out_leaves.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out_leaves)
+    return tree, step
+
+
+def prune_old(directory, keep: int = 3) -> None:
+    base = Path(directory)
+    if not base.exists():
+        return
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in base.iterdir()
+        if p.name.startswith("step_") and (p / "COMMIT").exists())
+    for s in steps[:-keep]:
+        shutil.rmtree(base / f"step_{s:08d}", ignore_errors=True)

@@ -1,0 +1,55 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Used by the dry-run (lower/compile with no allocation) and by smoke tests
+(which call make_dummy_batch to materialize small real arrays).  Modality
+frontends are stubs per the assignment: audio/vision entries provide
+precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """Returns {name: ShapeDtypeStruct} for one (arch, shape) cell.
+
+    train/prefill: the full token batch.  decode: a single-token step
+    (the KV cache is part of the jitted function's captured state spec,
+    built separately via Model.init_cache + eval_shape).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        toks = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    else:
+        toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs = {"tokens": toks}
+    if cfg.family == "encdec" and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, s // cfg.encoder_downsample, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_seq, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def make_dummy_batch(cfg: ModelConfig, batch: int, seq: int,
+                     seed: int = 0) -> dict[str, jax.Array]:
+    """Small real batch for smoke tests / examples."""
+    rng = np.random.RandomState(seed)
+    out = {"tokens": jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (batch, seq)), jnp.int32)}
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            0.1 * rng.randn(batch, max(1, seq // cfg.encoder_downsample),
+                            cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        out["patches"] = jnp.asarray(
+            0.1 * rng.randn(batch, cfg.vision_seq, cfg.d_model), cfg.dtype)
+    return out

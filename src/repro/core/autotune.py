@@ -1,0 +1,234 @@
+"""Granularity autotuner — the paper's cost model applied to TPU knobs.
+
+Every knob below is an instance of the paper's block-size problem: work is
+split into chunks, each chunk carries a fixed scheduling/synchronization
+overhead (the FAA-cost analogue ``L``), and oversized chunks lose parallelism
+or blow the fast-memory budget (the quota-imbalance analogue).  The selection
+rule is the paper's ``Cost(T, N, L) = N/B·L + O(N)/T (+ imbalance)`` evaluated
+over hardware-feasible candidates, with the learned rational model available
+as a prior via :func:`tpu_features`.
+
+Knobs governed here:
+
+* Pallas flash-attention ``(block_q, block_k)``  — MXU alignment (128) and
+  VMEM budget constrain candidates; grid-step dispatch overhead is ``L``.
+* flash-decode ``split_k``                       — more splits = more
+  parallelism, but each split pays a partial-softmax combine cost (``L``).
+* Mamba2 SSD ``chunk``                           — intra-chunk quadratic work
+  vs inter-chunk scan steps.
+* gradient-accumulation ``microbatch``           — per-microbatch collective
+  latency is ``L``.
+* data-pipeline ``grain``                        — host-side, uses the learned
+  model directly with the paper's feature semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.topology import TpuTopology, V5E_POD
+
+VMEM_BYTES = 128 * 1024 * 1024  # v5e VMEM per core (we budget ~half of it)
+VMEM_BUDGET = VMEM_BYTES // 2
+MXU = 128                        # systolic array edge: align matmul dims
+LANE = 128
+SUBLANE = 8
+
+
+def _aligned_candidates(limit: int, align: int = MXU) -> list[int]:
+    out = []
+    c = align
+    while c <= limit:
+        out.append(c)
+        c *= 2
+    return out or [align]
+
+
+def choose_block(
+    n: int,
+    workers: int,
+    overhead: float,
+    per_item_cost: float,
+    *,
+    candidates: Optional[Sequence[int]] = None,
+    jitter: float = 0.35,
+) -> int:
+    """argmin over candidates of the paper's analytic cost."""
+    cands = list(candidates) if candidates is not None else [
+        2**i for i in range(int(np.log2(max(2, n))) + 1)
+    ]
+    cands = [c for c in cands if 1 <= c <= n] or [1]
+    costs = [
+        cm.analytic_cost(n, c, overhead, per_item_cost, workers, quota=jitter)
+        for c in cands
+    ]
+    return int(cands[int(np.argmin(costs))])
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionBlocks:
+    block_q: int
+    block_k: int
+    vmem_bytes: int
+
+
+def attention_block_sizes(
+    seq_q: int,
+    seq_k: int,
+    head_dim: int,
+    *,
+    dtype_bytes: int = 2,
+    topo: TpuTopology = V5E_POD,
+    vmem_budget: int = VMEM_BUDGET,
+) -> AttentionBlocks:
+    """Pick (block_q, block_k) for the flash-attention kernel.
+
+    Per grid step (one q block × full K loop) the working set is
+    q[bq,dh] + k[bk,dh] + v[bk,dh] + scores[bq,bk] + o[bq,dh] + stats.
+    Candidates are MXU-aligned; ranking uses the analytic cost with
+    N = (Sq/bq)·(Sk/bk) inner steps and L = dispatch overhead, plus a
+    mild preference for larger arithmetic intensity (bigger bk amortizes
+    the q-block load, bigger bq amortizes the kv streaming).
+    """
+    best = None
+    per_step_flops = lambda bq, bk: 4.0 * bq * bk * head_dim  # qk^T + pv
+    for bq in _aligned_candidates(min(seq_q, 1024)):
+        for bk in _aligned_candidates(min(seq_k, 2048)):
+            vmem = dtype_bytes * (
+                bq * head_dim + 2 * bk * head_dim + bq * head_dim
+            ) + 4 * (bq * bk + 2 * bq)  # f32 scores + m/l stats
+            if vmem > vmem_budget:
+                continue
+            steps = (seq_q // bq) * max(1, seq_k // bk)
+            t_step = per_step_flops(bq, bk) / topo.peak_flops
+            # memory per step: stream k,v once per q block
+            m_step = dtype_bytes * 2 * bk * head_dim / topo.hbm_bw
+            cost = cm.analytic_cost(
+                steps, 1.0, topo.chunk_overhead_s, max(t_step, m_step), 1,
+                quota=0.0,
+            )
+            if best is None or cost < best[0]:
+                best = (cost, bq, bk, vmem)
+    assert best is not None
+    _, bq, bk, vmem = best
+    return AttentionBlocks(block_q=bq, block_k=bk, vmem_bytes=vmem)
+
+
+def decode_split_k(
+    seq_len: int,
+    *,
+    lanes: int = 8,           # parallel units available to one decode head
+    combine_overhead: float = 0.8e-6,
+    topo: TpuTopology = V5E_POD,
+    head_dim: int = 128,
+    dtype_bytes: int = 2,
+) -> int:
+    """flash-decode split count — the cleanest ParallelFor dual on device.
+
+    N = seq_len KV rows, ``B = seq_len/splits`` rows per split; each split
+    pays a combine cost (partial-softmax merge) = the FAA-analogue L.
+    """
+    bytes_per_row = 2 * head_dim * dtype_bytes
+    t_row = bytes_per_row / topo.hbm_bw
+    candidates = [s for s in (1, 2, 4, 8, 16, 32, 64) if s <= max(1, seq_len // 128)]
+    costs = [
+        combine_overhead * s + (seq_len * t_row) / min(s, lanes)
+        for s in candidates
+    ]
+    return int(candidates[int(np.argmin(costs))])
+
+
+def ssd_chunk_size(
+    seq_len: int,
+    headdim: int = 64,
+    d_state: int = 128,
+    *,
+    dtype_bytes: int = 2,
+    vmem_budget: int = VMEM_BUDGET,
+) -> int:
+    """Mamba2 SSD chunk length: intra-chunk cost ~ O(c²·h) per chunk with
+    N/c chunks, inter-chunk scan pays a per-chunk step cost — same tradeoff.
+    128 keeps the intra-chunk matmuls MXU-shaped."""
+    best, best_cost = 128, np.inf
+    for c in (64, 128, 256, 512):
+        if c > seq_len:
+            break
+        vmem = dtype_bytes * c * (headdim + 2 * d_state) * 8
+        if vmem > vmem_budget:
+            continue
+        n_chunks = max(1, seq_len // c)
+        intra = n_chunks * c * c * headdim          # quadratic-in-chunk work
+        inter = n_chunks * (headdim * d_state * 40)  # scan step overhead
+        if intra + inter < best_cost:
+            best, best_cost = c, intra + inter
+    return best
+
+
+def microbatch_count(
+    global_batch: int,
+    *,
+    grad_bytes: float,
+    topo: TpuTopology = V5E_POD,
+    step_flops: float = 1e15,
+    multi_pod: bool = False,
+) -> int:
+    """Gradient-accumulation microbatches: more microbatches overlap the
+    grads all-reduce with compute but pay per-microbatch launch + collective
+    latency; this is Cost(T,N,L) with N=global_batch and B=microbatch size."""
+    chips = topo.total_chips
+    # ring all-reduce wall time of the full gradient (slowest link decides):
+    link = topo.ici_bw if not multi_pod else topo.ici_bw / 4  # cross-pod hop
+    allreduce = 2.0 * grad_bytes / (chips * link)
+    launch = 25e-6  # per-microbatch dispatch + collective setup (L analogue)
+    compute = step_flops / (chips * topo.peak_flops)
+    candidates = [s for s in (1, 2, 4, 8, 16, 32) if s <= global_batch]
+    # with s microbatches the reduce of microbatch i overlaps compute of i+1;
+    # exposed comm = one microbatch's share, overhead = s launches:
+    costs = [
+        compute + launch * s + allreduce / s + max(0.0, allreduce - compute)
+        for s in candidates
+    ]
+    return int(candidates[int(np.argmin(costs))])
+
+
+def data_grain_size(
+    n_examples: int,
+    *,
+    host_threads: int = 8,
+    bytes_per_example: int = 4 * 4096,
+    topo: TpuTopology = V5E_POD,
+    params: Optional[dict] = None,
+) -> int:
+    """Host data-pipeline grain — direct use of the learned model with the
+    paper's own feature semantics (the host IS a multicore CPU)."""
+    feats = cm.WorkloadFeatures(
+        core_groups=max(1, topo.n_pods),
+        threads=host_threads,
+        unit_read=bytes_per_example,
+        unit_write=bytes_per_example,
+        unit_comp=1024,
+    )
+    return cm.suggest_block_size(feats, n=n_examples, params=params)
+
+
+def tpu_features(
+    *,
+    topo: TpuTopology,
+    chips: int,
+    bytes_in: float,
+    bytes_out: float,
+    flops: float,
+) -> cm.WorkloadFeatures:
+    """Map a device workload onto the paper's feature space:
+    G=pods (ICI domains), T=chips, R/W=bytes per item, C=flops per item."""
+    return cm.WorkloadFeatures(
+        core_groups=topo.n_pods,
+        threads=chips,
+        unit_read=max(2, int(bytes_in)),
+        unit_write=max(2, int(bytes_out)),
+        unit_comp=max(2, int(flops)),
+    )

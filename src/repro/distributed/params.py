@@ -1,0 +1,178 @@
+"""Parameter / cache / optimizer-state sharding rules.
+
+Path-pattern -> PartitionSpec, with two safety transforms applied per leaf:
+  * left-pad the spec with None for stacked-layer leading axes
+    ([L, ...] from scan stacking, [G, n, ...] from group stacking);
+  * prune mesh axes that do not divide the dimension (e.g. kv_heads=8 on a
+    16-way model axis, or batch=1 on long_500k) — pruned dims fall back to
+    replication; the roofline table shows the cost and §Perf revisits it.
+
+FSDP: matmul weights are sharded over BOTH "data" (fully-sharded / ZeRO-3
+axis) and "model" (tensor-parallel axis); XLA inserts per-layer all-gathers
+inside the scan, and remat keeps the working set at one layer.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ordered [(regex over "/"-joined path, spec for the *trailing* dims)]
+PARAM_RULES: list[tuple[str, P]] = [
+    (r"embed/table$", P("model", "data")),
+    (r"head/w$", P("data", "model")),
+    (r"router/w$", P()),                 # tiny; shard_map path wants it whole
+    (r"(wq|wk|wv|gate|up|in_proj|wq_a|wkv_a|shared_proj)/w$",
+     P("data", "model")),
+    (r"(wo|down|out_proj)/w$", P("model", "data")),
+    (r"(wq_b|wkv_b)/w$", P(None, "model")),
+    (r"moe/gate$", P("model", "data", None)),
+    (r"moe/up$", P("model", "data", None)),
+    (r"moe/down$", P("model", None, "data")),
+    (r"conv_w$", P(None, "model")),
+    (r"conv_b$", P("model",)),
+    (r"(A_log|D|dt_bias)$", P("model",)),
+    (r"/b$", P("model",)),              # projection biases (output dim)
+    (r"(scale|gate_attn|gate_mlp)$", P()),
+]
+
+# pure-FSDP (ZeRO-3) layout: no tensor parallelism — every matmul weight is
+# fully sharded over BOTH mesh axes on its input dim and gathered per layer;
+# activations are batch-sharded over (data x model).  Removes all per-layer
+# activation all-reduces at the cost of weight all-gathers.
+PARAM_RULES_FSDP: list[tuple[str, P]] = [
+    (r"embed/table$", P(("model", "data"), None)),
+    (r"router/w$", P()),
+    (r"(head|wq|wk|wv|gate|up|in_proj|wq_a|wkv_a|shared_proj|wq_b|wkv_b)/w$",
+     P(("data", "model"), None)),
+    (r"(wo|down|out_proj)/w$", P(("data", "model"), None)),
+    # experts stay expert-parallel (the shard_map dispatch owns them)
+    (r"moe/gate$", P("model", "data", None)),
+    (r"moe/up$", P("model", "data", None)),
+    (r"moe/down$", P("model", None, "data")),
+    (r"conv_w$", P(None, ("data", "model"))),
+    (r"conv_b$", P(("data", "model"),)),
+    (r"(A_log|D|dt_bias)$", P()),
+    (r"/b$", P(("data", "model"),)),
+    (r"(scale|gate_attn|gate_mlp)$", P()),
+]
+
+RULESETS = {"tp": PARAM_RULES, "fsdp": PARAM_RULES_FSDP}
+
+CACHE_RULES: list[tuple[str, P]] = [
+    (r"(^|/)(k|v|ck|cv)$", P(("pod", "data"), None, "model", None)),
+    (r"(^|/)(ckv|kr)$", P(("pod", "data"), None, None)),
+    (r"(^|/)state$", P(("pod", "data"), "model", None, None)),
+    (r"(^|/)conv$", P(("pod", "data"), None, "model")),
+    (r"(^|/)len$", P()),
+]
+
+_FSDP_B = ("pod", "data", "model")
+CACHE_RULES_FSDP: list[tuple[str, P]] = [
+    (r"(^|/)(k|v|ck|cv)$", P(_FSDP_B, None, None, None)),
+    (r"(^|/)(ckv|kr)$", P(_FSDP_B, None, None)),
+    (r"(^|/)state$", P(_FSDP_B, None, None, None)),
+    (r"(^|/)conv$", P(_FSDP_B, None, None)),
+    (r"(^|/)len$", P()),
+]
+
+# sequence-sharded KV for distributed flash-decode (decode_seq_shard)
+CACHE_RULES_SEQ: list[tuple[str, P]] = [
+    (r"(^|/)(k|v)$", P(("pod", "data"), "model", None, None)),
+    (r"(^|/)(ck|cv)$", P(("pod", "data"), None, "model", None)),
+    (r"(^|/)(ckv|kr)$", P(("pod", "data"), "model", None)),
+    (r"(^|/)state$", P(("pod", "data"), "model", None, None)),
+    (r"(^|/)conv$", P(("pod", "data"), None, "model")),
+    (r"(^|/)len$", P()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pk in path:
+        if hasattr(pk, "key"):
+            parts.append(str(pk.key))
+        elif hasattr(pk, "idx"):
+            parts.append(str(pk.idx))
+        else:
+            parts.append(str(pk))
+    return "/".join(parts)
+
+
+def _match(rules, path: str) -> Optional[P]:
+    for pat, spec in rules:
+        if re.search(pat, path):
+            return spec
+    return None
+
+
+def _fit_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Right-align spec to shape (pad leading Nones), prune non-dividing or
+    absent mesh axes."""
+    axes = list(spec)
+    if len(axes) > len(shape):
+        axes = axes[-len(shape):] if len(shape) else []
+    axes = [None] * (len(shape) - len(axes)) + axes
+
+    def ok(names, dim):
+        total = 1
+        for n in names:
+            if n not in mesh.shape:
+                return False
+            total *= mesh.shape[n]
+        return dim % total == 0 and total > 1
+
+    fixed = []
+    for dim, a in zip(shape, axes):
+        if a is None:
+            fixed.append(None)
+            continue
+        names = a if isinstance(a, tuple) else (a,)
+        names = tuple(n for n in names if n in mesh.shape)
+        # longest dividing prefix (batch 256 on (pod,data,model)=512 ->
+        # (pod,data)=32), then single-axis fallback
+        while names and not ok(names, dim):
+            names = names[:-1]
+        if not names:
+            orig = a if isinstance(a, tuple) else (a,)
+            names = tuple(n for n in orig if ok((n,), dim))[:1]
+        if not names:
+            fixed.append(None)
+        else:
+            fixed.append(names if len(names) > 1 else names[0])
+    return P(*fixed)
+
+
+def tree_shardings(tree: Any, mesh, rules, *,
+                   default: P = P()) -> Any:
+    """Map an (abstract) pytree to NamedShardings via the rule table."""
+
+    def assign(path, leaf):
+        spec = _match(rules, _path_str(path)) or default
+        return NamedSharding(mesh, _fit_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, tree)
+
+
+def param_shardings(abstract_params, mesh, layout: str = "tp"):
+    return tree_shardings(abstract_params, mesh, RULESETS[layout])
+
+
+def cache_shardings(abstract_cache, mesh, layout: str = "tp"):
+    rules = {"tp": CACHE_RULES, "fsdp": CACHE_RULES_FSDP,
+             "seq": CACHE_RULES_SEQ}[layout]
+    return tree_shardings(abstract_cache, mesh, rules)
+
+
+def batch_shardings(abstract_batch, mesh, layout: str = "tp"):
+    axes = ("pod", "data", "model") if layout == "fsdp" else ("pod", "data")
+    spec = P(tuple(a for a in axes if a in mesh.shape))
+
+    def assign(path, leaf):
+        return NamedSharding(mesh, _fit_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_batch)

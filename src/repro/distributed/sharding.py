@@ -1,0 +1,166 @@
+"""Sharding policy — centralizes every PartitionSpec in the framework.
+
+Model code never imports mesh axes; it calls ``constrain(x, name)`` with a
+logical name, and the active :class:`ShardingPolicy` (installed via the
+``policy`` context manager by the launcher / dry-run) maps names to
+PartitionSpecs.  Outside a policy context ``constrain`` is the identity, so
+models run untouched in unit tests on one CPU device.
+
+Axis semantics on the production mesh (see launch/mesh.py):
+  pod    — data-parallel replica groups across pods (slow links; the paper's
+           "core group" boundary)
+  data   — data parallel within a pod; FSDP parameter sharding
+  model  — tensor parallel: attention heads / FFN hidden / experts / KV heads
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# batch axes: data parallel spans (pod, data)
+BATCH = ("pod", "data")
+
+
+def _specs(multi_pod: bool, seq_parallel: bool = False,
+           fsdp_pure: bool = False) -> dict[str, P]:
+    b = BATCH if multi_pod else ("data",)
+    if fsdp_pure:
+        # ZeRO-3: batch over (data x model), no tensor parallelism anywhere.
+        # With seq_parallel, the model axis shards the SEQUENCE instead
+        # (Ulysses-style): right when global_batch < chips — compute stays
+        # fully parallel and attention pays only a KV all-gather.
+        bf = (*b, "model")
+        act = (P(b, "model", None) if seq_parallel
+               else P(bf, None, None))
+        return {
+            "act_btd": act,
+            "act_btd_tp": act,
+            "act_bthd": (P(b, "model", None, None) if seq_parallel
+                         else P(bf, None, None, None)),
+            "logits": (P(b, "model", None) if seq_parallel
+                       else P(bf, None, None)),
+            "tokens": P(bf, None),
+            "moe_tokens": P(bf, None),
+            "moe_buffers": P(),
+            "moe_logits": P(bf, None),
+            "kv_cache": (P(b, "model", None, None) if seq_parallel
+                         else P(bf, None, None, None)),
+            "mla_cache": (P(b, "model", None) if seq_parallel
+                          else P(bf, None, None)),
+            "ssm_state": P(bf, None, None, None),
+            "conv_cache": P(bf, None, None),
+            # stacked KV blocks inside the chunked-attention scan
+            # [nk, B, bk, Hkv, D]: keep batch sharding through the
+            # reshape/transpose (GSPMD otherwise all-gathers the cache)
+            "kv_blocks": P(None, bf, None, None, None),
+        }
+    return {
+        # activations; seq_parallel = sequence-parallel TP (Korthikanti et
+        # al.): residual-stream tensors sharded over S on the model axis,
+        # turning per-layer all-reduces into reduce-scatter + all-gather
+        "act_btd": (P(b, "model", None)
+                    if seq_parallel else P(b, None, None)),
+        "act_btd_tp": P(b, None, "model"),      # [B, S, d] d sharded (rare)
+        "act_bthd": P(b, None, "model", None),  # [B, S, H, dh] heads TP
+        "logits": P(b, None, "model"),          # [B, S, V] vocab TP
+        "tokens": P(b, None),                   # [B, S]
+        # MoE
+        "moe_tokens": P((*b, "model"), None),   # [T, d] token-sharded dispatch
+        # buffers [G, E, C, d]: claim groups over the batch axes (shard-local
+        # counters), experts over model (EP); G=1 falls back to pure EP
+        "moe_buffers": P(b, "model", None, None),
+        "moe_logits": P((*b, "model"), None),   # [T, E]
+        # KV / SSM caches
+        "kv_cache": P(b, None, "model", None),  # [B, S, Hkv, dh]
+        "mla_cache": P(b, None, None),          # [B, S, lora] replicated feat
+        "ssm_state": P(b, "model", None, None), # [B, H, P, N] heads TP
+        "conv_cache": P(b, None, "model"),      # [B, K-1, C] channels TP
+        # stacked KV blocks in the chunked-attention scan [nk, B, bk, Hkv, D]
+        "kv_blocks": P(None, b, None, "model", None),
+        # params (FSDP over data; TP over model)
+        "p_embed": P("model", None),                 # [V, d] vocab sharded
+        "p_col": P("data", "model"),                 # [d, ff] col-parallel
+        "p_row": P("model", "data"),                 # [ff, d] row-parallel
+        "p_replicated": P(),
+        "p_expert_col": P("model", None, "data"),    # [E, d, f]
+        "p_expert_row": P("model", "data", None),    # [E, f, d]
+        "p_vec": P(None,),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: jax.sharding.Mesh
+    multi_pod: bool = False
+    seq_parallel: bool = False
+    fsdp_pure: bool = False
+    # decode: KV cache sequence-sharded over model + shard_map flash-decode
+    # with partial-softmax combine (attention.distributed_decode_attention)
+    decode_seq_shard: bool = False
+
+    def spec(self, name: str) -> Optional[P]:
+        return _specs(self.multi_pod, self.seq_parallel,
+                      self.fsdp_pure).get(name)
+
+    def named_sharding(self, name: str) -> jax.sharding.NamedSharding:
+        return jax.sharding.NamedSharding(self.mesh, self.spec(name))
+
+
+_ACTIVE: contextvars.ContextVar[Optional[ShardingPolicy]] = (
+    contextvars.ContextVar("sharding_policy", default=None)
+)
+
+
+@contextlib.contextmanager
+def policy(p: ShardingPolicy):
+    token = _ACTIVE.set(p)
+    try:
+        with p.mesh:
+            yield p
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_policy() -> Optional[ShardingPolicy]:
+    return _ACTIVE.get()
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Apply the active policy's PartitionSpec for `name` (identity if none).
+
+    For specs with more axes than x has dims, trailing axes are dropped;
+    mesh axes not present on the mesh are skipped.
+    """
+    pol = _ACTIVE.get()
+    if pol is None:
+        return x
+    spec = pol.spec(name)
+    if spec is None:
+        return x
+    axes = list(spec)[: x.ndim]
+    axes += [None] * (x.ndim - len(axes))
+
+    def keep(a, dim):
+        if a is None:
+            return None
+        names = a if isinstance(a, tuple) else (a,)
+        names = tuple(n for n in names if n in pol.mesh.axis_names)
+        # longest prefix of the axis tuple whose product divides the dim
+        # (e.g. batch 256 on (pod,data,model)=512 degrades to (pod,data)=32)
+        while names:
+            total = 1
+            for n in names:
+                total *= pol.mesh.shape[n]
+            if total > 1 and dim % total == 0:
+                return names if len(names) > 1 else names[0]
+            names = names[:-1]
+        return None
+
+    fixed = P(*[keep(a, d) for a, d in zip(axes, x.shape)])
+    return jax.lax.with_sharding_constraint(x, fixed)

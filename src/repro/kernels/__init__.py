@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper with autotuned block sizes), ref.py (pure-jnp
+oracle).  Block/tile/split sizes are the paper's ParallelFor block size,
+chosen by repro.core.autotune.  Validated on CPU with interpret=True.
+"""

@@ -1,0 +1,121 @@
+"""Flash-decode — Pallas TPU kernel with split-K partial softmax.
+
+This kernel is the cleanest on-device embodiment of the paper's ParallelFor:
+N = kv_len cache rows are split into ``num_splits`` blocks; each split is an
+independent worker producing a partial (m, l, acc); a cheap combine merges
+them.  More splits = more parallelism but more combine overhead (the paper's
+FAA-cost term L) — ``num_splits`` is chosen by
+repro.core.autotune.decode_split_k.
+
+Grid: (B, Hkv, num_splits).  All G = Hq/Hkv query heads of one KV head are
+processed together (q tile [G, D] keeps the MXU busy; G=1..128 across the
+assigned archs).  kv_len arrives via scalar prefetch.
+
+Note on TPU layout: the per-split stats outputs are [..., G] with G < 128;
+on real hardware Mosaic pads the lane dim — acceptable since stats are tiny
+next to the KV stream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(kv_len_ref, q_ref, k_ref, v_ref,
+                   o_ref, m_ref, l_ref, *, split_size: int, d: int):
+    b = pl.program_id(0)
+    s_idx = pl.program_id(2)
+    kv_len = kv_len_ref[b]
+
+    q = q_ref[0, 0].astype(jnp.float32)           # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)           # [ss, D]
+    v = v_ref[0, 0].astype(jnp.float32)           # [ss, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (1.0 / np.sqrt(d))                    # [G, ss]
+    pos = s_idx * split_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    m = jnp.max(s, axis=1, keepdims=True)         # [G, 1]
+    # all-masked split: exp(NEG_INF - NEG_INF) would be 1 — guard with m>-inf
+    safe_m = jnp.maximum(m, -1e29)
+    p = jnp.where(m > NEG_INF / 2, jnp.exp(s - safe_m), 0.0)
+    l = jnp.sum(p, axis=1, keepdims=True)         # [G, 1]
+    acc = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[0, 0, 0] = acc
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+def decode_attention_fwd(
+    q: jax.Array,        # [B, Hq, D]
+    k: jax.Array,        # [B, S, Hkv, D]
+    v: jax.Array,
+    kv_len: jax.Array,   # [B] int32
+    *,
+    num_splits: int,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    ns = num_splits
+    while s % ns:
+        ns //= 2
+    ns = max(1, ns)
+    ss = s // ns
+
+    qt = q.reshape(b, hkv, g, d)
+    kt = k.transpose(0, 2, 1, 3)   # [B, Hkv, S, D]
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_decode_kernel, split_size=ss, d=d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j, *_: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, ss, d), lambda b_, h, j, *_: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, ss, d), lambda b_, h, j, *_: (b_, h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g, d),
+                         lambda b_, h, j, *_: (b_, h, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g, 1),
+                         lambda b_, h, j, *_: (b_, h, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g, 1),
+                         lambda b_, h, j, *_: (b_, h, j, 0, 0)),
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, ns, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, ns, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, ns, g, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"),
+        ),
+        interpret=interpret,
+        name="flash_decode",
+    )(kv_len.astype(jnp.int32), qt, kt, vt)
+
+    # ---- combine partial softmaxes (the per-split "FAA" cost) ----
+    m_glob = jnp.max(m_part, axis=2, keepdims=True)          # [B,Hkv,1,G,1]
+    w = jnp.exp(m_part - m_glob)
+    l_glob = jnp.sum(l_part * w, axis=2)                     # [B,Hkv,G,1]
+    o = jnp.sum(o_part * w, axis=2) / jnp.maximum(l_glob, 1e-30)
+    return o.reshape(b, hq, d).astype(q.dtype)

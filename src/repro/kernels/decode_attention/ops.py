@@ -1,0 +1,31 @@
+"""Public flash-decode op with cost-model-chosen split count."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.core import autotune
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("num_splits", "interpret"))
+def decode_attention(
+    q: jax.Array,        # [B, Hq, D]
+    k: jax.Array,        # [B, S, Hkv, D]
+    v: jax.Array,
+    kv_len: jax.Array,   # [B] int32
+    *,
+    num_splits: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    s = k.shape[1]
+    d = q.shape[-1]
+    if num_splits is None:
+        num_splits = autotune.decode_split_k(s, head_dim=d)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return decode_attention_fwd(q, k, v, kv_len, num_splits=num_splits,
+                                interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash-decode: one query token vs a KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q [B,Hq,D]; k,v [B,S,Hkv,D]; kv_len [B] int32 -> [B,Hq,D]."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    sc = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32))
+    sc = sc / np.sqrt(d)
+    mask = jnp.arange(s)[None, :] < kv_len[:, None]          # [B,S]
+    sc = jnp.where(mask[:, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,80 @@
+"""Public flash-attention op: autotuned blocks, custom_vjp (flash backward
+kernels), CPU interpret fallback.
+
+On CPU (this container) the kernels run in interpret mode for validation;
+on TPU they compile to Mosaic.  Block sizes default to the cost-model
+autotuner's choice (repro.core.autotune).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.core import autotune
+from repro.kernels.flash_attention.kernel import (flash_attention_bwd,
+                                                  flash_attention_fwd)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve_blocks(sq, skv, d, block_q, block_k):
+    if block_q is None or block_k is None:
+        blocks = autotune.attention_block_sizes(sq, skv, d)
+        block_q = block_q or max(8, min(blocks.block_q, sq))
+        block_k = block_k or max(8, min(blocks.block_k, skv))
+    while sq % block_q:
+        block_q //= 2
+    while skv % block_k:
+        block_k //= 2
+    return max(block_q, 1), max(block_k, 1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, block_q, block_k, interpret):
+    out, _ = flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                                 block_k=block_k, interpret=interpret)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_k, interpret):
+    out, lse = flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                                   block_k=block_k, interpret=interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, block_q, block_k, interpret, res, do):
+    q, k, v, out, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, out, lse, do, causal=causal, block_q=block_q,
+        block_k=block_k, interpret=interpret)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """q [B,Sq,Hq,D], k/v [B,Skv,Hkv,D] -> [B,Sq,Hq,D]. Differentiable
+    (flash backward kernels with recompute)."""
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    block_q, block_k = _resolve_blocks(sq, skv, d, block_q, block_k)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _flash(q, k, v, causal, block_q, block_k, interpret)

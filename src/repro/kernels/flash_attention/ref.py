@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive full softmax)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import jax
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q [B,Sq,Hq,D]; k,v [B,Skv,Hkv,D]; Hq = G*Hkv.  fp32 softmax."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    s = s / np.sqrt(d)
+    if causal:
+        qpos = jnp.arange(sq) + (skv - sq)
+        mask = jnp.arange(skv)[None, :] <= qpos[:, None]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, d).astype(q.dtype)

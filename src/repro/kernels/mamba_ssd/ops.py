@@ -1,0 +1,30 @@
+"""Public SSD op with cost-model-chosen chunk length."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.core import autotune
+from repro.kernels.mamba_ssd.kernel import ssd_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jax.Array,      # [B, S, H, P]
+    dt: jax.Array,     # [B, S, H]
+    a: jax.Array,      # [H]
+    b_in: jax.Array,   # [B, S, G, N]
+    c_in: jax.Array,
+    *,
+    chunk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+):
+    if chunk is None:
+        chunk = autotune.ssd_chunk_size(
+            x.shape[1], headdim=x.shape[-1], d_state=b_in.shape[-1])
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ssd_fwd(x, dt, a, b_in, c_in, chunk=chunk, interpret=interpret)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the SSD kernel: literal sequential state recurrence.
+
+Independent of the chunked implementations (models/ssm.py and the Pallas
+kernel both decompose into chunks; this oracle never does):
+
+    state_t = state_{t-1} * exp(dt_t * A) + dt_t * x_t outer B_t
+    y_t     = C_t . state_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, b_in, c_in, initial_state=None):
+    """x [B,S,H,P]; dt [B,S,H] (post-softplus); a [H] (negative);
+    b_in, c_in [B,S,G,N].  Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b_in.astype(jnp.float32), rep, axis=2)   # [B,S,H,N]
+    ch = jnp.repeat(c_in.astype(jnp.float32), rep, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((bsz, h, p, n), jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                      # [B,H,P],[B,H],[B,H,N]x2
+        decay = jnp.exp(dtt * af[None, :])         # [B,H]
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt, bt)
+        state = state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", ct, state)
+        return state, y
+
+    final, ys = jax.lax.scan(
+        step, s0,
+        (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+         bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3)
+    return y.astype(x.dtype), final

@@ -1,0 +1,54 @@
+"""Public grouped-matmul ops: tile selection via the cost model's analytic
+ranking, plus the composed gated expert FFN."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.kernels.moe_gmm.kernel import gmm
+
+
+def _pick_tiles(c: int, d: int, f: int, dtype_bytes: int = 2):
+    """Rank MXU-aligned tiles by the analytic cost model (VMEM-feasible)."""
+    best = (128, 128, 128)
+    best_cost = float("inf")
+    for bc in (128, 256, 512):
+        for bf in (128, 256, 512):
+            for bd in (128, 256, 512):
+                vmem = dtype_bytes * (bc * bd + bd * bf) + 4 * bc * bf
+                if vmem > autotune.VMEM_BUDGET // 2:
+                    continue
+                steps = max(1, (c // bc) * (f // bf) * (d // bd))
+                t_step = 2 * bc * bf * bd / autotune.V5E_POD.peak_flops
+                cost = steps * (t_step + autotune.V5E_POD.chunk_overhead_s)
+                if cost < best_cost:
+                    best, best_cost = (bc, bf, bd), cost
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grouped_matmul(x: jax.Array, w: jax.Array, *,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """x [E, C, d] @ w [E, d, f] -> [E, C, f]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bc, bf, bd = _pick_tiles(x.shape[1], x.shape[2], w.shape[2])
+    return gmm(x, w, block_c=bc, block_f=bf, block_d=bd,
+               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def expert_ffn(x, gate, up, down, *, interpret: Optional[bool] = None):
+    """Gated expert FFN on capacity buffers: silu(x@gate) * (x@up) @ down."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    h = grouped_matmul(x, gate, interpret=interpret).astype(jnp.float32)
+    h = jax.nn.silu(h) * grouped_matmul(x, up, interpret=interpret).astype(
+        jnp.float32)
+    return grouped_matmul(h.astype(x.dtype), down,
+                          interpret=interpret)

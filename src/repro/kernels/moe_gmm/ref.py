@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the grouped expert matmul."""
+
+import jax.numpy as jnp
+
+
+def gmm_ref(x, w):
+    """x [E, C, d], w [E, d, f] -> [E, C, f] (fp32 accumulation)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def expert_ffn_ref(x, gate, up, down):
+    """Gated expert FFN on capacity buffers (the MoE hot loop)."""
+    h = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   gate.astype(jnp.float32))
+    h = h / (1.0 + jnp.exp(-h))  # silu
+    h = h * jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                       up.astype(jnp.float32))
+    out = jnp.einsum("ecf,efd->ecd", h, down.astype(jnp.float32))
+    return out.astype(x.dtype)

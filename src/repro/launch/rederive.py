@@ -1,0 +1,40 @@
+"""Recompute derived roofline fields in every dry-run record (when the
+MODEL_FLOPS convention changes) — raw parsed HLO stats are kept as-is.
+
+    PYTHONPATH=src python -m repro.launch.rederive
+"""
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.launch.roofline import Roofline, model_flops_for
+
+DRY = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def main():
+    n = 0
+    for f in sorted(DRY.glob("*.json")):
+        r = json.loads(f.read_text())
+        if not r.get("ok"):
+            continue
+        rl = r["roofline"]
+        cfg = get_config(r["arch"])
+        # re-apply any knob that changes flops accounting? (none do)
+        shape = SHAPES[r["shape"]]
+        new = Roofline(
+            flops=rl["flops_per_device"],
+            hbm_bytes=rl["hbm_bytes_per_device"],
+            collective_bytes=rl["collective_bytes_per_device"],
+            chips=r["chips"],
+            model_flops=model_flops_for(cfg, shape),
+            hbm_bytes_pessimistic=rl.get("hbm_bytes_pessimistic", 0.0))
+        r["roofline"] = new.to_dict()
+        f.write_text(json.dumps(r, indent=1, default=float))
+        n += 1
+    print(f"rederived {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Render EXPERIMENTS.md tables from results/ (dry-run JSONs + bench CSVs).
+
+    PYTHONPATH=src python -m repro.launch.report roofline
+    PYTHONPATH=src python -m repro.launch.report perf
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[3]
+DRY = ROOT / "results" / "dryrun"
+
+
+def load(tagged=False):
+    rows = []
+    for f in sorted(DRY.glob("*.json")):
+        r = json.loads(f.read_text())
+        has_tag = bool(r.get("tag"))
+        if has_tag != tagged:
+            continue
+        rows.append(r)
+    return rows
+
+
+def roofline_md():
+    print("| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) |"
+          " bottleneck | useful | frac | GB/dev | compile (s) |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in load():
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                  f" FAILED: {r.get('error','')[:60]} |")
+            continue
+        rl = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {rl['t_compute_s']:.3f} | {rl['t_memory_s']:.3f} "
+              f"| {rl['t_collective_s']:.3f} | {rl['bottleneck']} "
+              f"| {rl['useful_flops_ratio']:.2f} "
+              f"| {rl['roofline_fraction']:.3f} "
+              f"| {r['static_bytes_per_device']/1e9:.1f} "
+              f"| {r['t_compile_s']:.0f} |")
+
+
+def perf_md():
+    print("| cell | variant | t_comp | t_mem | t_coll | bottleneck |"
+          " frac | Δfrac vs base |")
+    print("|---|---|---|---|---|---|---|---|")
+    base = {}
+    for r in load(tagged=False):
+        if r.get("ok"):
+            base[(r["arch"], r["shape"], r["mesh"])] = (
+                r["roofline"]["roofline_fraction"])
+    entries = []
+    for r in load(tagged=True):
+        key = (r["arch"], r["shape"], r["mesh"])
+        if not r.get("ok"):
+            entries.append((key, r["tag"], None, r.get("error", "")[:60]))
+            continue
+        rl = r["roofline"]
+        entries.append((key, r["tag"], rl, None))
+    for key, tag, rl, err in sorted(entries, key=lambda x: (x[0], x[1])):
+        cell = f"{key[0]}×{key[1]}×{key[2]}"
+        if rl is None:
+            print(f"| {cell} | {tag} | FAILED {err} |")
+            continue
+        b = base.get(key, 0)
+        print(f"| {cell} | {tag} | {rl['t_compute_s']:.3f} "
+              f"| {rl['t_memory_s']:.3f} | {rl['t_collective_s']:.3f} "
+              f"| {rl['bottleneck']} | {rl['roofline_fraction']:.3f} "
+              f"| {rl['roofline_fraction'] - b:+.3f} |")
+
+
+if __name__ == "__main__":
+    {"roofline": roofline_md, "perf": perf_md}[sys.argv[1]]()

@@ -1,0 +1,5 @@
+from repro.models import attention, layers, mla, model, moe, ssm, transformer
+from repro.models.model import Model
+
+__all__ = ["attention", "layers", "mla", "model", "moe", "ssm",
+           "transformer", "Model"]

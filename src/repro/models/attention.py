@@ -1,0 +1,287 @@
+"""Attention: chunked (flash-style) softmax attention in pure JAX.
+
+The chunked path is the framework default — it never materializes the full
+[Sq, Sk] score matrix, so 32k-token prefill lowers with bounded live memory.
+Chunk sizes are the paper's block-size knob, chosen by
+:func:`repro.core.autotune.attention_block_sizes`; on real TPUs the Pallas
+kernel (`repro.kernels.flash_attention`) takes over via ``use_kernel``.
+
+Layout convention: q [B, Sq, Hq, D]; k, v [B, Skv, Hkv, D]; Hq = G * Hkv.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def naive_attention(q, k, v, *, causal=True, kv_len=None, q_offset=None):
+    """O(S²)-memory oracle (tests & tiny shapes only)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) / np.sqrt(d)
+    qpos = jnp.arange(sq) + (q_offset if q_offset is not None else (skv - sq))
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((b, sq, skv), bool)
+    if causal:
+        mask &= (kpos[None, :] <= qpos[:, None])[None]
+    if kv_len is not None:
+        kl = jnp.broadcast_to(jnp.asarray(kv_len), (b,))
+        mask &= kpos[None, None, :] < kl[:, None, None]
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_k: Optional[int] = None,
+    kv_len: Optional[jax.Array] = None,
+    q_offset: Optional[int] = None,
+) -> jax.Array:
+    """Flash-style attention: scan over KV blocks with running (m, l, o).
+
+    kv_len: optional [B] (or scalar) valid-length mask over the KV axis (for
+    decode against a fixed-size cache). q_offset: absolute position of q[0]
+    (defaults to Skv - Sq, the standard suffix alignment).
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]           # may differ from d (MLA latent decode)
+    g = hq // hkv
+    bk = block_k or autotune.attention_block_sizes(sq, skv, d).block_k
+    bk = int(min(bk, skv))
+    nk = -(-skv // bk)
+    pad = nk * bk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    offset = q_offset if q_offset is not None else (skv - sq)
+    qpos = (jnp.arange(sq) + offset).astype(jnp.int32)
+    qf = (q.astype(jnp.float32) / np.sqrt(d)).reshape(b, sq, hkv, g, d)
+    # [nk, B, bk, Hkv, D].  NB: forcing a sharding constraint on these
+    # stacked blocks was tried and REFUTED (EXPERIMENTS.md §Perf, "kvblk"):
+    # GSPMD's resharding around the forced layout cost more than the cache
+    # gather it avoided; the real decode fix is a shard_map flash-decode
+    # with partial-softmax combine (see kernels/decode_attention).
+    ks = k.reshape(b, nk, bk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, bk, hkv, dv).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inputs):
+        m, l, o = carry
+        kblk, vblk, blk_idx = inputs
+        kpos = blk_idx * bk + jnp.arange(bk, dtype=jnp.int32)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kblk.astype(jnp.float32))
+        mask = jnp.ones((b, sq, bk), bool)
+        if causal:
+            mask &= kpos[None, None, :] <= qpos[None, :, None]
+        mask &= kpos[None, None, :] < skv  # padding
+        if kv_len is not None:
+            kl = jnp.asarray(kv_len)
+            kl = kl[:, None, None] if kl.ndim else kl
+            mask &= kpos[None, None, :] < kl
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vblk.astype(jnp.float32)
+        )
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, sq, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+    o0 = jnp.zeros((b, sq, hkv, g, dv), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        body, (m0, l0, o0), (ks, vs, jnp.arange(nk, dtype=jnp.int32))
+    )
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, hq, dv).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, block_k=None, kv_len=None,
+              q_offset=None, use_kernel=False):
+    """Dispatch: Pallas kernel on TPU, chunked jnp elsewhere."""
+    if use_kernel:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(
+            q, k, v, causal=causal, kv_len=kv_len, q_offset=q_offset
+        )
+    return chunked_attention(
+        q, k, v, causal=causal, block_k=block_k, kv_len=kv_len,
+        q_offset=q_offset,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA attention block (projections + rope + cache)
+# ---------------------------------------------------------------------------
+
+def distributed_decode_attention(q, k, v, kv_len, *, mesh, axis="model",
+                                 batch_axes=("data",)):
+    """Flash-decode split across the mesh's model axis — the split-K
+    ParallelFor dual at cluster scale.
+
+    The KV cache arrives SEQUENCE-SHARDED over `axis` (each chip owns
+    S/m cache rows); every chip computes a partial (m, l, o) over its rows
+    and three tiny collectives (pmax + 2 psum over [B, H(, D)]) combine the
+    partial softmaxes — wire cost per step is O(B·H·D), vs gathering the
+    whole cache.
+
+    q [B, Hq, D]; k/v [B, S, Hkv, D]; kv_len scalar or [B].
+    """
+    from jax.sharding import PartitionSpec as P
+
+    b_, hq, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]          # may differ from d (MLA latent decode)
+    g = hq // hkv
+
+    def body(q_l, k_l, v_l, kvl):
+        idx = jax.lax.axis_index(axis)
+        s_loc = k_l.shape[1]
+        pos = idx * s_loc + jnp.arange(s_loc)
+        qf = (q_l.astype(jnp.float32) / np.sqrt(d)).reshape(
+            q_l.shape[0], hkv, g, d)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_l.astype(jnp.float32))
+        mask = pos[None, :] < kvl[:, None]
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m_l = jnp.max(s, axis=-1)                       # [B,Hkv,G]
+        m_g = jax.lax.pmax(m_l, axis)
+        p = jnp.exp(s - m_g[..., None])
+        l_g = jax.lax.psum(jnp.sum(p, -1), axis)        # [B,Hkv,G]
+        o_l = jnp.einsum("bhgk,bkhd->bhgd", p, v_l.astype(jnp.float32))
+        o_g = jax.lax.psum(o_l, axis)
+        out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
+        return out.reshape(q_l.shape[0], hq, dv).astype(q_l.dtype)
+
+    ba = tuple(a for a in ("pod", *batch_axes) if a in mesh.shape)
+    ba = ba if q.shape[0] % max(
+        1, int(np.prod([mesh.shape[a] for a in ba]))) == 0 else ()
+    bspec = ba if ba else None
+    kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (q.shape[0],))
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(bspec, axis, None, None),
+                  P(bspec, axis, None, None), P(bspec)),
+        out_specs=P(bspec, None, None),
+        check_vma=False,
+    )(q, k, v, kvl)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    use_rope: bool = True
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    hd = cfg.head_dim
+    return {
+        "wq": layers.dense_init(kq, cfg.d_model, cfg.n_heads * hd,
+                                bias=cfg.qkv_bias, dtype=dtype),
+        "wk": layers.dense_init(kk, cfg.d_model, cfg.n_kv_heads * hd,
+                                bias=cfg.qkv_bias, dtype=dtype),
+        "wv": layers.dense_init(kv, cfg.d_model, cfg.n_kv_heads * hd,
+                                bias=cfg.qkv_bias, dtype=dtype),
+        "wo": layers.dense_init(
+            ko, cfg.n_heads * hd, cfg.d_model,
+            stddev=1.0 / np.sqrt(cfg.n_heads * hd), dtype=dtype),
+    }
+
+
+def attn_apply(
+    p,
+    cfg: AttnConfig,
+    x: jax.Array,
+    *,
+    kv: Optional[jax.Array] = None,      # cross-attention source
+    cache: Optional[dict] = None,         # {"k","v": [B,Smax,Hkv,D], "len": int32}
+    positions: Optional[jax.Array] = None,
+    block_k: Optional[int] = None,
+    use_kernel: bool = False,
+):
+    """Returns (out [B,S,d], new_cache or None)."""
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    src = kv if kv is not None else x
+    q = layers.dense(p["wq"], x).reshape(b, s, hq, hd)
+    k = layers.dense(p["wk"], src).reshape(b, src.shape[1], hkv, hd)
+    v = layers.dense(p["wv"], src).reshape(b, src.shape[1], hkv, hd)
+
+    new_cache = None
+    kv_len = None
+    q_offset = None
+    if cache is not None:
+        length = cache["len"]
+        if cfg.use_rope:
+            qpos = length + jnp.arange(s)
+            q = layers.apply_rope(q, jnp.broadcast_to(qpos, (b, s)),
+                                  cfg.rope_theta)
+            kpos = length + jnp.arange(src.shape[1])
+            k = layers.apply_rope(k, jnp.broadcast_to(kpos, (b, src.shape[1])),
+                                  cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, length, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, length, 0, 0))
+        new_cache = {"k": ck, "v": cv, "len": length + s}
+        k, v = ck, cv
+        from repro.distributed.sharding import active_policy
+        pol = active_policy()
+        if (s == 1 and pol is not None and pol.decode_seq_shard
+                and "model" in pol.mesh.shape
+                and k.shape[1] % pol.mesh.shape["model"] == 0):
+            out = distributed_decode_attention(
+                q[:, 0], k, v, length + s, mesh=pol.mesh)[:, None]
+        else:
+            # causal alignment: query i sits at absolute position length+i,
+            # so q_offset is the (dynamic) pre-update cache length.
+            out = attention(q, k, v, causal=cfg.causal, block_k=block_k,
+                            kv_len=length + s, q_offset=length,
+                            use_kernel=use_kernel)
+    else:
+        if cfg.use_rope:
+            pos = positions if positions is not None else jnp.arange(s)[None, :]
+            q = layers.apply_rope(q, jnp.broadcast_to(pos, (b, s)), cfg.rope_theta)
+            k = layers.apply_rope(
+                k, jnp.broadcast_to(pos, (b, src.shape[1])), cfg.rope_theta)
+        out = attention(q, k, v, causal=cfg.causal, block_k=block_k,
+                        use_kernel=use_kernel)
+    out = layers.dense(p["wo"], out.reshape(b, s, hq * hd))
+    return out, new_cache
+
+
+def init_kv_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,135 @@
+"""Primitive layers — pure functional JAX (params are plain pytrees).
+
+Every layer is an (init, apply) pair. Params are nested dicts of jnp arrays;
+stacking a layer's params along a new leading axis makes it scannable
+(`jax.lax.scan` over layers), which keeps the lowered HLO compact — essential
+for the 512-device dry-run compiles.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+
+
+def dense_init(key, d_in, d_out, *, bias=False, stddev=None, dtype=jnp.float32):
+    stddev = stddev if stddev is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": truncated_normal(key, (d_in, d_out), stddev).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embedding_init(key, vocab, d, dtype=jnp.float32):
+    return {"table": truncated_normal(key, (vocab, d), 0.02).astype(dtype)}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p, x):
+    """Tied read-out: logits via the embedding table."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def gated_rmsnorm(p, x, gate, eps=1e-5):
+    """Mamba2-style norm: RMSNorm(x * silu(gate))."""
+    return rmsnorm(p, x * jax.nn.silu(gate.astype(x.dtype)), eps)
+
+
+def mlp_init(key, d, d_ff, *, act="silu", dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(k1, d, d_ff, dtype=dtype),
+        "down": dense_init(k2, d_ff, d, stddev=1.0 / np.sqrt(d_ff), dtype=dtype),
+    }
+    if act == "silu":  # gated (SwiGLU) — all assigned LM archs use this
+        p["gate"] = dense_init(k3, d, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(p, x, *, act="silu"):
+    if act == "silu":
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    else:
+        h = jax.nn.gelu(dense(p["up"], x))
+    return dense(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """x: [..., S, H, D] (D even); positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    sin = jnp.sin(angles)[..., None, :]  # [..., S, 1, D/2]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+                  cache: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. x: [B, S, C], w: [K, C].
+
+    Returns (y, new_cache) where cache holds the last K-1 inputs for decode.
+    """
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, C]
+    # depthwise: sum_k w[k] * x[t-K+1+k]
+    y = sum(w[i].astype(x.dtype) * xp[:, i : i + x.shape[1], :] for i in range(k))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    new_cache = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(pad)
+    return y, new_cache
+
+
+def softmax_cross_entropy(logits: jax.Array, targets: jax.Array,
+                          mask: Optional[jax.Array] = None):
+    """Mean next-token loss. logits [B,S,V] (any float), targets [B,S] int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

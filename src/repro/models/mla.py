@@ -1,0 +1,157 @@
+"""DeepSeek-V2 Multi-head Latent Attention (arXiv:2405.04434).
+
+Prefill runs the standard (non-absorbed) formulation; decode runs the
+*absorbed* formulation attending directly over the compressed latent cache
+(kv_lora + rope dims per token), which is what makes 32k-decode memory
+feasible: the cache stores ``c_kv`` [B,S,lora] + ``k_rope`` [B,S,dr] instead
+of per-head K/V.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0          # 0 = direct q projection (deepseek-v2-lite)
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    p = {
+        "wkv_a": layers.dense_init(ks[0], cfg.d_model,
+                                   cfg.kv_lora_rank + dr, dtype=dtype),
+        "kv_norm": layers.rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "wkv_b": layers.dense_init(ks[1], cfg.kv_lora_rank, h * (dn + dv),
+                                   dtype=dtype),
+        "wo": layers.dense_init(ks[2], h * dv, cfg.d_model,
+                                stddev=1.0 / np.sqrt(h * dv), dtype=dtype),
+    }
+    if cfg.q_lora_rank:
+        p["wq_a"] = layers.dense_init(ks[3], cfg.d_model, cfg.q_lora_rank,
+                                      dtype=dtype)
+        p["q_norm"] = layers.rmsnorm_init(cfg.q_lora_rank, dtype)
+        p["wq_b"] = layers.dense_init(ks[4], cfg.q_lora_rank,
+                                      h * cfg.qk_dim, dtype=dtype)
+    else:
+        p["wq"] = layers.dense_init(ks[5], cfg.d_model, h * cfg.qk_dim,
+                                    dtype=dtype)
+    return p
+
+
+def _project_q(p, cfg: MLAConfig, x):
+    b, s, _ = x.shape
+    if cfg.q_lora_rank:
+        q = layers.dense(p["wq_b"],
+                         layers.rmsnorm(p["q_norm"], layers.dense(p["wq_a"], x)))
+    else:
+        q = layers.dense(p["wq"], x)
+    return q.reshape(b, s, cfg.n_heads, cfg.qk_dim)
+
+
+def mla_apply(
+    p,
+    cfg: MLAConfig,
+    x: jax.Array,
+    *,
+    cache: Optional[dict] = None,  # {"ckv":[B,Smax,lora],"kr":[B,Smax,dr],"len"}
+    block_k: Optional[int] = None,
+):
+    """Returns (out, new_cache or None)."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    length = cache["len"] if cache is not None else 0
+
+    q = _project_q(p, cfg, x)
+    qn, qr = jnp.split(q, [dn], axis=-1)
+    qpos = length + jnp.arange(s)
+    qr = layers.apply_rope(qr, jnp.broadcast_to(qpos, (b, s)), cfg.rope_theta)
+
+    ckv_kr = layers.dense(p["wkv_a"], x)
+    ckv, kr = jnp.split(ckv_kr, [cfg.kv_lora_rank], axis=-1)
+    ckv = layers.rmsnorm(p["kv_norm"], ckv)                 # [B,S,lora]
+    kr = layers.apply_rope(kr[:, :, None, :],
+                           jnp.broadcast_to(qpos, (b, s)),
+                           cfg.rope_theta)[:, :, 0, :]      # [B,S,dr]
+
+    new_cache = None
+    if cache is not None:
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, length, 0))
+        ck = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, length, 0))
+        new_cache = {"ckv": cc, "kr": ck, "len": length + s}
+
+    if cache is not None and s == 1:
+        # ----- absorbed decode over the latent cache -----
+        wkv_b = p["wkv_b"]["w"].reshape(cfg.kv_lora_rank, h, dn + dv)
+        w_kn, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
+        q_lat = jnp.einsum("bshd,lhd->bshl", qn.astype(jnp.float32),
+                           w_kn.astype(jnp.float32))
+        # fold MLA's true scale (qk_dim) into q: chunked_attention divides by
+        # sqrt(d_k) of its *input* key dim, so pre-scale to compensate.
+        d_k = cfg.kv_lora_rank + dr
+        fix = np.sqrt(d_k) / np.sqrt(cfg.qk_dim)
+        qq = jnp.concatenate([q_lat, qr.astype(jnp.float32)], axis=-1) * fix
+        kk = jnp.concatenate([new_cache["ckv"], new_cache["kr"]],
+                             axis=-1)[:, :, None, :]        # [B,Smax,1,lora+dr]
+        vv = new_cache["ckv"][:, :, None, :]                # [B,Smax,1,lora]
+        from repro.distributed.sharding import active_policy
+        pol = active_policy()
+        if (pol is not None and pol.decode_seq_shard
+                and "model" in pol.mesh.shape
+                and kk.shape[1] % pol.mesh.shape["model"] == 0):
+            # distributed flash-decode over the sequence-sharded latent cache
+            o_lat = attn_mod.distributed_decode_attention(
+                qq.astype(x.dtype)[:, 0], kk.astype(x.dtype),
+                vv.astype(x.dtype), length + s, mesh=pol.mesh)[:, None]
+        else:
+            o_lat = attn_mod.chunked_attention(
+                qq.astype(x.dtype), kk.astype(x.dtype), vv.astype(x.dtype),
+                causal=True, block_k=block_k, kv_len=length + s,
+                q_offset=length)
+        out = jnp.einsum("bshl,lhv->bshv", o_lat.astype(jnp.float32),
+                         w_v.astype(jnp.float32)).astype(x.dtype)
+    else:
+        # ----- standard formulation (train / prefill) -----
+        kv = layers.dense(p["wkv_b"], ckv).reshape(b, s, h, dn + dv)
+        kn, v = jnp.split(kv, [dn], axis=-1)
+        k = jnp.concatenate(
+            [kn, jnp.broadcast_to(kr[:, :, None, :], (b, s, h, dr))], axis=-1)
+        qq = jnp.concatenate([qn, qr], axis=-1)
+        out = attn_mod.chunked_attention(
+            qq, k, v, causal=True, block_k=block_k,
+            kv_len=None if cache is None else length + s,
+            q_offset=None if cache is None else length)
+    out = layers.dense(p["wo"], out.reshape(b, s, h * dv))
+    return out, new_cache
+
+
+def init_mla_cache(cfg: MLAConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }

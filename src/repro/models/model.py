@@ -1,0 +1,419 @@
+"""Top-level Model: init / loss / prefill / decode_step for every family.
+
+Public API (used by train/, serve/, launch/):
+
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    loss, metrics = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch, max_len)
+    logits, cache = model.decode_step(params, tokens, cache)
+
+Loss never materializes [B, S, V] logits — the head is applied in sequence
+chunks inside a scan (vocab up to 256206 would otherwise dominate memory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import layers, mla, ssm, transformer as tfm
+
+LOSS_CHUNK = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = cfg.dtype
+        keys = jax.random.split(key, 8)
+        p: dict[str, Any] = {
+            "embed": layers.embedding_init(keys[0], cfg.vocab_size,
+                                           cfg.d_model, dtype),
+            "ln_f": layers.rmsnorm_init(cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = layers.dense_init(keys[1], cfg.d_model,
+                                          cfg.vocab_size, stddev=0.02,
+                                          dtype=dtype)
+        fam = cfg.family
+        if fam in ("dense",):
+            p["blocks"] = tfm.stacked_init(
+                lambda k: tfm.dense_block_init(k, cfg, dtype=dtype),
+                keys[2], cfg.n_layers)
+        elif fam == "moe":
+            nd = cfg.first_dense_layers
+            if nd:
+                p["dense0"] = tfm.stacked_init(
+                    lambda k: tfm.dense_block_init(
+                        k, cfg, d_ff=cfg.dense_d_ff, dtype=dtype),
+                    keys[3], nd)
+            p["blocks"] = tfm.stacked_init(
+                lambda k: tfm.moe_block_init(k, cfg, dtype=dtype),
+                keys[2], cfg.n_layers - nd)
+        elif fam == "ssm":
+            p["blocks"] = tfm.stacked_init(
+                lambda k: tfm.ssm_block_init(k, cfg, dtype=dtype),
+                keys[2], cfg.n_layers)
+        elif fam == "hybrid":
+            g = cfg.n_layers // cfg.attn_every
+            p["groups"] = tfm.stacked_init(
+                lambda k: tfm.stacked_init(
+                    lambda k2: tfm.ssm_block_init(k2, cfg, dtype=dtype),
+                    k, cfg.attn_every),
+                keys[2], g)
+            p["shared_proj"] = layers.dense_init(
+                keys[4], 2 * cfg.d_model, cfg.d_model, dtype=dtype)
+            p["shared"] = tfm.dense_block_init(keys[5], cfg, dtype=dtype)
+        elif fam == "vlm":
+            p["groups"] = {
+                "self": tfm.stacked_init(
+                    lambda k: tfm.stacked_init(
+                        lambda k2: tfm.dense_block_init(k2, cfg, dtype=dtype),
+                        k, cfg.self_per_group),
+                    keys[2], cfg.cross_attn_groups),
+                "cross": tfm.stacked_init(
+                    lambda k: tfm.cross_block_init(k, cfg, gated=True,
+                                                   dtype=dtype),
+                    keys[3], cfg.cross_attn_groups),
+            }
+        elif fam == "encdec":
+            enc_cfg = dataclasses.replace(cfg)
+            p["enc_blocks"] = tfm.stacked_init(
+                lambda k: self._enc_block_init(k, enc_cfg, dtype),
+                keys[2], cfg.n_encoder_layers)
+            p["dec_blocks"] = tfm.stacked_init(
+                lambda k: self._encdec_block_init(k, cfg, dtype),
+                keys[3], cfg.n_layers)
+            p["enc_ln"] = layers.rmsnorm_init(cfg.d_model, dtype)
+        else:
+            raise ValueError(f"unknown family {fam}")
+        return p
+
+    # ---------------------------------------------------------- enc-dec bits
+
+    @staticmethod
+    def _enc_block_init(key, cfg: ModelConfig, dtype):
+        k1, k2 = jax.random.split(key)
+        ac = tfm.attn_cfg(cfg, causal=False)
+        return {
+            "ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn_mod.attn_init(k1, ac, dtype),
+            "ln2": layers.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": layers.mlp_init(k2, cfg.d_model, cfg.d_ff, act=cfg.act,
+                                   dtype=dtype),
+        }
+
+    @staticmethod
+    def _enc_block_apply(p, cfg: ModelConfig, x):
+        ac = tfm.attn_cfg(cfg, causal=False)
+        h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        a, _ = attn_mod.attn_apply(p["attn"], ac, h)
+        x = x + a
+        h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + layers.mlp(p["mlp"], h, act=cfg.act)
+        return constrain(x, "act_btd")
+
+    @staticmethod
+    def _encdec_block_init(key, cfg: ModelConfig, dtype):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+            "self": attn_mod.attn_init(k1, tfm.attn_cfg(cfg), dtype),
+            "ln2": layers.rmsnorm_init(cfg.d_model, dtype),
+            "xattn": attn_mod.attn_init(
+                k2, tfm.attn_cfg(cfg, causal=False, use_rope=False), dtype),
+            "ln3": layers.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": layers.mlp_init(k3, cfg.d_model, cfg.d_ff, act=cfg.act,
+                                   dtype=dtype),
+        }
+
+    def _encdec_block_apply(self, p, x, enc, cache=None):
+        """cache: {"self": kv-cache, "ck","cv": cross K/V} or None."""
+        cfg = self.cfg
+        h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        self_cache = cache["self"] if cache is not None else None
+        a, new_self = attn_mod.attn_apply(p["self"], tfm.attn_cfg(cfg), h,
+                                          cache=self_cache)
+        x = x + a
+        # cross attention
+        ac = tfm.attn_cfg(cfg, causal=False, use_rope=False)
+        h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        b, s, _ = h.shape
+        hd, hq, hkv = ac.head_dim, ac.n_heads, ac.n_kv_heads
+        if enc is None:
+            ck, cv = cache["ck"], cache["cv"]
+        else:
+            ck = layers.dense(p["xattn"]["wk"], enc).reshape(
+                b, enc.shape[1], hkv, hd)
+            cv = layers.dense(p["xattn"]["wv"], enc).reshape(
+                b, enc.shape[1], hkv, hd)
+            if cache is not None:
+                ck = ck.astype(cache["ck"].dtype)
+                cv = cv.astype(cache["cv"].dtype)
+        q = layers.dense(p["xattn"]["wq"], h).reshape(b, s, hq, hd)
+        o = attn_mod.chunked_attention(q, ck, cv, causal=False)
+        x = x + layers.dense(p["xattn"]["wo"], o.reshape(b, s, hq * hd))
+        h = layers.rmsnorm(p["ln3"], x, cfg.norm_eps)
+        x = x + layers.mlp(p["mlp"], h, act=cfg.act)
+        x = constrain(x, "act_btd")
+        new_cache = ({"self": new_self, "ck": ck, "cv": cv}
+                     if cache is not None else None)
+        return x, new_cache, jnp.zeros((), jnp.float32)
+
+    # ------------------------------------------------------------- backbone
+
+    def _backbone(self, params, x, batch, caches=None, *, train=False):
+        """x: [B,S,d] embedded tokens. Returns (x, new_caches, aux)."""
+        cfg = self.cfg
+        fam = cfg.family
+        remat = train
+
+        if fam == "dense":
+            return tfm.scan_layers(
+                lambda p, xc, c: tfm.dense_block_apply(p, cfg, xc, cache=c),
+                params["blocks"], x, caches, remat=remat, remat_policy=cfg.remat_policy)
+
+        if fam == "moe":
+            aux = jnp.zeros((), jnp.float32)
+            new_caches = {}
+            nd = cfg.first_dense_layers
+            if nd:
+                c0 = caches["dense0"] if caches is not None else None
+                x, nc0, a0 = tfm.scan_layers(
+                    lambda p, xc, c: tfm.dense_block_apply(p, cfg, xc,
+                                                           cache=c),
+                    params["dense0"], x, c0, remat=remat, remat_policy=cfg.remat_policy)
+                new_caches["dense0"] = nc0
+                aux += a0
+            cm = caches["blocks"] if caches is not None else None
+            x, ncm, am = tfm.scan_layers(
+                lambda p, xc, c: tfm.moe_block_apply(p, cfg, xc, cache=c),
+                params["blocks"], x, cm, remat=remat, remat_policy=cfg.remat_policy)
+            new_caches["blocks"] = ncm
+            aux += am
+            return x, (new_caches if caches is not None else None), aux
+
+        if fam == "ssm":
+            return tfm.scan_layers(
+                lambda p, xc, c: tfm.ssm_block_apply(p, cfg, xc, cache=c),
+                params["blocks"], x, caches, remat=remat, remat_policy=cfg.remat_policy)
+
+        if fam == "hybrid":
+            x0 = x  # original embeddings feed the shared block every group
+
+            def group_apply(gp, xc, gc):
+                ssm_c = gc["ssm"] if gc is not None else None
+                xc, new_ssm, aux = tfm.scan_layers(
+                    lambda p, xx, c: tfm.ssm_block_apply(p, cfg, xx, cache=c),
+                    gp, xc, ssm_c, remat=False)
+                h = layers.dense(params["shared_proj"],
+                                 jnp.concatenate([xc, x0], axis=-1))
+                attn_c = gc["attn"] if gc is not None else None
+                h, new_attn, a2 = tfm.dense_block_apply(
+                    params["shared"], cfg, h, cache=attn_c)
+                xc = xc + h
+                xc = constrain(xc, "act_btd")
+                new_gc = ({"ssm": new_ssm, "attn": new_attn}
+                          if gc is not None else None)
+                return xc, new_gc, aux + a2
+
+            return tfm.scan_layers(group_apply, params["groups"], x, caches,
+                                   remat=remat)
+
+        if fam == "vlm":
+            patches = batch.get("patches")
+            if patches is not None:
+                patches = patches.astype(x.dtype)
+
+            def group_apply(gp, xc, gc):
+                self_c = gc["self"] if gc is not None else None
+                xc, new_self, aux = tfm.scan_layers(
+                    lambda p, xx, c: tfm.dense_block_apply(p, cfg, xx,
+                                                           cache=c),
+                    gp["self"], xc, self_c, remat=False)
+                cross_c = gc["cross"] if gc is not None else None
+                xc, new_cross, a2 = tfm.cross_block_apply(
+                    gp["cross"], cfg, xc, patches, cache=cross_c)
+                new_gc = ({"self": new_self, "cross": new_cross}
+                          if gc is not None else None)
+                return xc, new_gc, aux + a2
+
+            return tfm.scan_layers(group_apply, params["groups"], x, caches,
+                                   remat=remat)
+
+        if fam == "encdec":
+            frames = batch.get("frames")
+            if frames is not None:
+                enc = frames.astype(x.dtype)
+
+                def enc_body(carry, p):
+                    return self._enc_block_apply(p, cfg, carry), None
+
+                enc, _ = jax.lax.scan(enc_body, enc, params["enc_blocks"])
+                enc = layers.rmsnorm(params["enc_ln"], enc, cfg.norm_eps)
+            else:
+                enc = None  # decode: cross K/V come from the cache
+
+            return tfm.scan_layers(
+                lambda p, xc, c: self._encdec_block_apply(p, xc, enc,
+                                                          cache=c),
+                params["dec_blocks"], x, caches, remat=remat, remat_policy=cfg.remat_policy)
+
+        raise ValueError(fam)
+
+    # ----------------------------------------------------------------- loss
+
+    def _logits(self, params, x):
+        if self.cfg.tie_embeddings:
+            return layers.unembed(params["embed"], x)
+        return layers.dense(params["head"], x)
+
+    def loss(self, params, batch):
+        """Next-token CE over batch["tokens"]; returns (loss, metrics)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = layers.embed(params["embed"], tokens).astype(cfg.dtype)
+        x = constrain(x, "act_btd")
+        x, _, aux = self._backbone(params, x, batch, None, train=True)
+        x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+        # chunked CE: predict tokens[:, i+1] from x[:, i]; last pos masked.
+        b, s, _ = x.shape
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones((b, s - 1), jnp.float32), jnp.zeros((b, 1), jnp.float32)],
+            axis=1)
+        chunk = min(LOSS_CHUNK, s)
+        pad = (-s) % chunk
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            targets = jnp.pad(targets, ((0, 0), (0, pad)))
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        nc = (s + pad) // chunk
+        xc = x.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+        tc = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+        mc = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+        def body(carry, inp):
+            xs, ts, ms = inp
+            logits = self._logits(params, xs)
+            logits = constrain(logits, "logits")
+            logits = logits.astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, ts[..., None], axis=-1)[..., 0]
+            nll = jnp.sum((logz - gold) * ms)
+            return (carry[0] + nll, carry[1] + jnp.sum(ms)), None
+
+        (total, denom), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (xc, tc, mc))
+        ce = total / jnp.maximum(denom, 1.0)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------ inference
+
+    def init_cache(self, batch_size: int, max_len: int,
+                   dtype=jnp.bfloat16, enc_len: Optional[int] = None) -> Any:
+        cfg = self.cfg
+        fam = cfg.family
+        ac = tfm.attn_cfg(cfg)
+        sc = tfm.ssm_cfg(cfg) if cfg.ssm_state else None
+
+        def stack(make, n):
+            one = make()
+            return jax.tree.map(lambda a: jnp.broadcast_to(
+                a[None], (n,) + a.shape), one)
+
+        if fam in ("dense", "moe"):
+            if cfg.use_mla:
+                mk = lambda: mla.init_mla_cache(tfm.mla_cfg(cfg), batch_size,
+                                                max_len, dtype)
+            else:
+                mk = lambda: attn_mod.init_kv_cache(ac, batch_size, max_len,
+                                                    dtype)
+            if fam == "dense":
+                return stack(mk, cfg.n_layers)
+            out = {"blocks": stack(mk, cfg.n_layers - cfg.first_dense_layers)}
+            if cfg.first_dense_layers:
+                out["dense0"] = stack(mk, cfg.first_dense_layers)
+            return out
+        if fam == "ssm":
+            return stack(lambda: ssm.init_ssm_cache(sc, batch_size),
+                         cfg.n_layers)
+        if fam == "hybrid":
+            g = cfg.n_layers // cfg.attn_every
+            def mk_group():
+                return {
+                    "ssm": stack(lambda: ssm.init_ssm_cache(sc, batch_size),
+                                 cfg.attn_every),
+                    "attn": attn_mod.init_kv_cache(ac, batch_size, max_len,
+                                                   dtype),
+                }
+            return stack(mk_group, g)
+        if fam == "vlm":
+            def mk_group():
+                return {
+                    "self": stack(lambda: attn_mod.init_kv_cache(
+                        ac, batch_size, max_len, dtype), cfg.self_per_group),
+                    "cross": {
+                        "ck": jnp.zeros((batch_size, cfg.vision_seq,
+                                         ac.n_kv_heads, ac.head_dim), dtype),
+                        "cv": jnp.zeros((batch_size, cfg.vision_seq,
+                                         ac.n_kv_heads, ac.head_dim), dtype),
+                    },
+                }
+            return stack(mk_group, cfg.cross_attn_groups)
+        if fam == "encdec":
+            enc_len = enc_len or max_len // cfg.encoder_downsample
+            def mk():
+                return {
+                    "self": attn_mod.init_kv_cache(ac, batch_size, max_len,
+                                                   dtype),
+                    "ck": jnp.zeros((batch_size, enc_len, ac.n_kv_heads,
+                                     ac.head_dim), dtype),
+                    "cv": jnp.zeros((batch_size, enc_len, ac.n_kv_heads,
+                                     ac.head_dim), dtype),
+                }
+            return stack(mk, cfg.n_layers)
+        raise ValueError(fam)
+
+    def prefill(self, params, batch, max_len: int,
+                cache_dtype=jnp.bfloat16):
+        """Run the prompt; returns (last-token logits [B,V], cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        enc_len = (batch["frames"].shape[1] if cfg.family == "encdec"
+                   else None)
+        cache = self.init_cache(b, max_len, cache_dtype, enc_len=enc_len)
+        x = layers.embed(params["embed"], tokens).astype(cfg.dtype)
+        x = constrain(x, "act_btd")
+        x, cache, _ = self._backbone(params, x, batch, cache, train=False)
+        x = layers.rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+        logits = self._logits(params, x)[:, 0]
+        return logits.astype(jnp.float32), cache
+
+    def decode_step(self, params, tokens, cache):
+        """tokens: [B,1] -> (logits [B,V], new cache)."""
+        cfg = self.cfg
+        batch = {"tokens": tokens}
+        x = layers.embed(params["embed"], tokens).astype(cfg.dtype)
+        x, cache, _ = self._backbone(params, x, batch, cache, train=False)
+        x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = self._logits(params, x)[:, 0]
+        return logits.astype(jnp.float32), cache

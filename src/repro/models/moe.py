@@ -1,0 +1,156 @@
+"""Mixture-of-Experts with prefix-sum slot claiming — the paper's FAA,
+TPU-native.
+
+On x86, ParallelFor workers *claim* work ranges with an atomic fetch-and-add.
+The MoE dispatch problem is identical: every (token, choice) must claim a slot
+in its expert's buffer, exactly once, bounded by capacity.  A GPU
+implementation would use atomicAdd per token; on TPU we compute all claims at
+once with a **parallel prefix sum over the token axis** (cumsum of the expert
+one-hot), which yields the same slot numbers FAA would have handed out in
+token order — deterministic, contention-free, and differentiable.  The
+capacity (buffer granularity) is the paper's block size: too small drops
+tokens (lost parallelism), too large wastes memory/compute (the overhead
+term); ``capacity_factor`` is tuned accordingly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff: int                    # per-expert hidden
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_zloss: float = 1e-3
+    aux_loss_weight: float = 1e-2
+    # 0 = one global prefix sum over all tokens (faithful single-counter
+    # FAA).  >0 = hierarchical claiming: tokens split into this many groups,
+    # each with its own counters and capacity share — the paper's
+    # core-group insight applied to dispatch (groups align with mesh shards,
+    # so the cumsum and scatter stay shard-local).
+    dispatch_groups: int = 0
+
+    @property
+    def shared_d_ff(self) -> int:
+        return self.n_shared_experts * self.d_ff
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    std_in, std_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    p = {
+        "router": layers.dense_init(ks[0], d, e, stddev=0.02,
+                                    dtype=jnp.float32),
+        "gate": (std_in * jax.random.normal(ks[1], (e, d, f))).astype(dtype),
+        "up": (std_in * jax.random.normal(ks[2], (e, d, f))).astype(dtype),
+        "down": (std_out * jax.random.normal(ks[3], (e, f, d))).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.mlp_init(ks[4], d, cfg.shared_d_ff, dtype=dtype)
+    return p
+
+
+def prefix_sum_slots(expert_idx: jax.Array, n_experts: int, capacity: int):
+    """FAA-equivalent slot assignment via parallel prefix sum.
+
+    expert_idx: [T, K] chosen expert per (token, choice).  Returns
+    (slot [T, K] int32, keep [T, K] bool).  Slots are assigned in (k, token)
+    priority order — first choices claim before second choices, matching the
+    order a FAA counter per expert would serve a deterministic worker queue.
+    """
+    t, k = expert_idx.shape
+    # order: k-major — flatten [K, T] so all k=0 claims precede k=1.
+    flat = expert_idx.T.reshape(-1)                       # [K*T]
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)  # [K*T, E]
+    ranks = jnp.cumsum(onehot, axis=0) - onehot           # claims before mine
+    slot = jnp.take_along_axis(ranks, flat[:, None], axis=1)[:, 0]
+    keep = slot < capacity
+    return (slot.reshape(k, t).T.astype(jnp.int32),
+            keep.reshape(k, t).T)
+
+
+def moe_apply(
+    p,
+    cfg: MoEConfig,
+    x: jax.Array,                 # [B, S, d]
+    *,
+    capacity: Optional[int] = None,
+):
+    """Returns (out [B,S,d], metrics dict with 'aux_loss', 'dropped')."""
+    b, s, d = x.shape
+    t = b * s
+    tokens = constrain(x.reshape(t, d), "moe_tokens")
+    e, k = cfg.n_experts, cfg.top_k
+    g = cfg.dispatch_groups or 1
+    while t % g:
+        g //= 2
+    tg = t // g
+
+    logits = tokens.astype(jnp.float32) @ p["router"]["w"]   # [T, E] fp32
+    logits = constrain(logits, "moe_logits")
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                   # [T, K]
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    cap = capacity or int(np.ceil(tg * k / e * cfg.capacity_factor))
+    cap = max(8, -(-cap // 8) * 8)  # sublane-align buffers
+    # hierarchical claiming: an independent counter set per token group
+    slot, keep = jax.vmap(
+        lambda ei: prefix_sum_slots(ei, e, cap))(top_i.reshape(g, tg, k))
+    slot = slot.reshape(t, k)
+    keep = keep.reshape(t, k)
+    weight = jnp.where(keep, top_p, 0.0)                     # [T, K]
+
+    # ---- dispatch: scatter tokens into expert buffers [G, E, C, d] ----
+    e_flat = top_i.reshape(g, tg * k)
+    s_flat = jnp.where(keep, slot, cap - 1).reshape(g, tg * k)
+    vals = jnp.repeat(tokens.reshape(g, tg, 1, d), k, axis=2)
+    vals = vals.reshape(g, tg * k, d) * keep.reshape(
+        g, tg * k, 1).astype(tokens.dtype)
+
+    def scatter_group(ef, sf, va):
+        buf = jnp.zeros((e, cap, d), tokens.dtype)
+        return buf.at[ef, sf].add(va, mode="drop")
+
+    buf = jax.vmap(scatter_group)(e_flat, s_flat, vals)      # [G, E, C, d]
+    buf = constrain(buf, "moe_buffers")
+
+    # ---- expert FFN (gated); weights broadcast over groups ----
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf,
+                               p["gate"].astype(buf.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, p["up"].astype(buf.dtype))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["down"].astype(buf.dtype))
+    out_buf = constrain(out_buf, "moe_buffers")
+
+    # ---- combine: gather back and weight ----
+    gathered = jax.vmap(lambda ob, ef, sf: ob[ef, sf])(
+        out_buf, e_flat, s_flat).reshape(t, k, d)
+    out = jnp.sum(gathered * weight[..., None].astype(gathered.dtype), axis=1)
+
+    if cfg.n_shared_experts:
+        out = out + layers.mlp(p["shared"], tokens)
+
+    # ---- aux losses (Switch/GShard style) ----
+    assign_frac = jnp.mean(
+        jax.nn.one_hot(top_i[:, 0], e, dtype=jnp.float32), axis=0)
+    prob_frac = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(assign_frac * prob_frac) * cfg.aux_loss_weight
+    zloss = cfg.router_zloss * jnp.mean(
+        jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    metrics = {"aux_loss": aux + zloss, "dropped": dropped}
+    return out.reshape(b, s, d), metrics

@@ -1,0 +1,206 @@
+"""Mamba2 — state-space duality (SSD), chunked algorithm (arXiv:2405.21060).
+
+The chunk length is a ParallelFor block size in the paper's exact sense:
+the sequence is split into chunks; each chunk does quadratic-in-chunk local
+work (the "task"), and a sequential inter-chunk state scan plays the
+synchronization role — more chunks = more scan steps (the FAA-cost analogue),
+fewer chunks = more quadratic work per chunk.  The default comes from
+:func:`repro.core.autotune.ssd_chunk_size`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    n_groups: int = 1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def ssm_init(key, cfg: SSMConfig, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + cfg.n_heads
+    # dt bias init: softplus^-1 of dt in [1e-3, 1e-1] (mamba2 reference)
+    u = jax.random.uniform(k3, (cfg.n_heads,))
+    dt = jnp.exp(u * (np.log(1e-1) - np.log(1e-3)) + np.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": layers.dense_init(k1, cfg.d_model, d_in_proj, dtype=dtype),
+        "conv_w": (0.1 * jax.random.normal(
+            k4, (cfg.d_conv, cfg.conv_channels))).astype(dtype),
+        "conv_b": jnp.zeros((cfg.conv_channels,), dtype),
+        "A_log": jnp.log(jnp.arange(1, cfg.n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((cfg.n_heads,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": layers.rmsnorm_init(cfg.d_inner, dtype),
+        "out_proj": layers.dense_init(
+            k2, cfg.d_inner, cfg.d_model,
+            stddev=1.0 / np.sqrt(cfg.d_inner), dtype=dtype),
+    }
+
+
+def _segsum(x):
+    """segsum(x)[..., i, j] = sum_{j < k <= i} x[..., k]  (i >= j), else -inf.
+
+    x: [..., Q] -> [..., Q, Q]; used for the intra-chunk decay matrix."""
+    q = x.shape[-1]
+    cum = jnp.cumsum(x, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,        # [B, S, H, P]
+    dt: jax.Array,       # [B, S, H]  (post-softplus)
+    a: jax.Array,        # [H]        (negative)
+    b_in: jax.Array,     # [B, S, G, N]
+    c_in: jax.Array,     # [B, S, G, N]
+    *,
+    chunk: Optional[int] = None,
+    initial_state: Optional[jax.Array] = None,  # [B, H, P, N]
+):
+    """Chunked SSD scan. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    rep = h // g
+    q = int(min(chunk or autotune.ssd_chunk_size(s, p, n), s))
+    assert s % q == 0, f"seq {s} must be divisible by chunk {q}"
+    nc = s // q
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, q, h)
+    bh = jnp.repeat(b_in.astype(jnp.float32), rep, axis=2).reshape(
+        bsz, nc, q, h, n)
+    ch = jnp.repeat(c_in.astype(jnp.float32), rep, axis=2).reshape(
+        bsz, nc, q, h, n)
+
+    da = dtf * a.astype(jnp.float32)[None, None, None, :]   # [B,NC,Q,H]
+    cum = jnp.cumsum(da, axis=2)                            # [B,NC,Q,H]
+    # intra-chunk: scores[b,c,h,i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j
+    l_mat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))      # [B,NC,H,Q,Q]
+    cb = jnp.einsum("bcihn,bcjhn->bchij", ch, bh)
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", cb * l_mat, dtf, xf)
+
+    # chunk-final states: sum_j B_j dt_j x_j exp(cum_last - cum_j)
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)          # [B,NC,Q,H]
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", bh, decay_states * dtf, xf)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # [B,NC,H]
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((bsz, h, p, n), jnp.float32))
+
+    def scan_fn(carry, inp):
+        st, dec = inp           # [B,H,P,N], [B,H]
+        new = carry * dec[:, :, None, None] + st
+        return new, carry       # emit the state *entering* this chunk
+
+    final, prev_states = jax.lax.scan(
+        scan_fn, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # [B,NC,H,P,N]
+
+    y_inter = jnp.einsum(
+        "bcihn,bchpn->bcihp", ch * jnp.exp(cum)[..., None], prev_states)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(
+    x: jax.Array,      # [B, 1, H, P]
+    dt: jax.Array,     # [B, 1, H]
+    a: jax.Array,      # [H]
+    b_in: jax.Array,   # [B, 1, G, N]
+    c_in: jax.Array,   # [B, 1, G, N]
+    state: jax.Array,  # [B, H, P, N]
+):
+    bsz, _, h, p = x.shape
+    g = b_in.shape[2]
+    rep = h // g
+    xf = x[:, 0].astype(jnp.float32)
+    dtf = dt[:, 0].astype(jnp.float32)
+    bh = jnp.repeat(b_in[:, 0].astype(jnp.float32), rep, axis=1)
+    ch = jnp.repeat(c_in[:, 0].astype(jnp.float32), rep, axis=1)
+    da = jnp.exp(dtf * a.astype(jnp.float32)[None, :])       # [B,H]
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dtf, xf, bh)
+    new_state = state.astype(jnp.float32) * da[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", ch, new_state)
+    return y[:, None].astype(x.dtype), new_state
+
+
+def ssm_apply(
+    p,
+    cfg: SSMConfig,
+    x: jax.Array,                     # [B, S, d_model]
+    *,
+    cache: Optional[dict] = None,     # {"conv": [B,K-1,C], "state": [B,H,P,N]}
+    chunk: Optional[int] = None,
+):
+    """Full Mamba2 block. Returns (out, new_cache or None)."""
+    bsz, s, _ = x.shape
+    h, pdim, n, g = cfg.n_heads, cfg.headdim, cfg.d_state, cfg.n_groups
+    zxbcdt = layers.dense(p["in_proj"], x)
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [cfg.d_inner, cfg.d_inner + cfg.conv_channels], axis=-1)
+    conv_cache = cache["conv"] if cache is not None else None
+    xbc, new_conv = layers.causal_conv1d(xbc, p["conv_w"], p["conv_b"],
+                                         cache=conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xs, b_in, c_in = jnp.split(
+        xbc, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+    xs = xs.reshape(bsz, s, h, pdim)
+    b_in = b_in.reshape(bsz, s, g, n)
+    c_in = c_in.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["A_log"])
+
+    if cache is not None and s == 1:
+        y, new_state = ssd_decode_step(xs, dt, a, b_in, c_in, cache["state"])
+    else:
+        init = cache["state"] if cache is not None else None
+        y, new_state = ssd_chunked(xs, dt, a, b_in, c_in, chunk=chunk,
+                                   initial_state=init)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = layers.gated_rmsnorm(p["norm"], y, z)
+    out = layers.dense(p["out_proj"], y)
+    new_cache = ({"conv": new_conv, "state": new_state}
+                 if cache is not None else None)
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_channels), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.headdim, cfg.d_state),
+                           jnp.float32),
+    }

@@ -1,0 +1,70 @@
+"""Serving engine: batched prefill + decode with per-sequence state.
+
+Static-batch engine (the production mesh's serve_step is what the dry-run
+lowers); requests are padded into the batch, finished sequences are masked
+out, and freed slots are refilled between generate() calls.  Decode runs
+the model's cache path (absorbed-MLA / SSD state / KV cache per family);
+greedy or temperature sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    eos_id: int = -1            # -1 = never stops early
+    temperature: float = 0.0    # 0 = greedy
+    cache_dtype: str = "float32"
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cfg.max_len,
+                                       jnp.dtype(cfg.cache_dtype)))
+        self._decode = jax.jit(model.decode_step)
+
+    def _sample(self, logits, key):
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1)
+
+    def generate(
+        self,
+        batch: dict,
+        max_new_tokens: int,
+        *,
+        seed: int = 0,
+    ) -> np.ndarray:
+        """batch: family-appropriate dict with "tokens" [B, S_prompt].
+        Returns generated tokens [B, max_new_tokens] (eos-padded)."""
+        key = jax.random.PRNGKey(seed)
+        logits, cache = self._prefill(self.params, batch)
+        b = batch["tokens"].shape[0]
+        out = np.full((b, max_new_tokens), self.cfg.eos_id, np.int32)
+        done = np.zeros((b,), bool)
+        key, k0 = jax.random.split(key)
+        tok = self._sample(logits, k0).astype(jnp.int32)
+        for t in range(max_new_tokens):
+            out[:, t] = np.where(done, self.cfg.eos_id, np.asarray(tok))
+            done |= np.asarray(tok) == self.cfg.eos_id
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, tok[:, None], cache)
+            key, kt = jax.random.split(key)
+            tok = self._sample(logits, kt).astype(jnp.int32)
+        return out

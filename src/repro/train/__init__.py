@@ -1,0 +1,3 @@
+from repro.train import optimizer, train_step
+
+__all__ = ["optimizer", "train_step"]

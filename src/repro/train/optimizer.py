@@ -1,0 +1,94 @@
+"""AdamW + cosine schedule + global-norm clipping, from scratch (no optax).
+
+Moments are fp32 regardless of param dtype; optional fp32 master copy.
+State is a plain pytree so the checkpoint layer and the sharding rules treat
+it like params (moments inherit the param's PartitionSpec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    master_copy: bool = False   # fp32 master params (else update in-dtype)
+
+
+def init_state(params, cfg: AdamWConfig) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+    }
+    if cfg.master_copy:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = schedule(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    t = step.astype(jnp.float32)
+
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2)
+                     * jnp.square(g.astype(jnp.float32)),
+                     state["v"], grads)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    base = state.get("master", params)
+
+    def upd(p, m_, v_):
+        mh = m_ / bc1
+        vh = v_ / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0  # skip norms/biases
+        return p32 - lr * (delta + wd * p32)
+
+    new_base = jax.tree.map(upd, base, m, v)
+    new_params = jax.tree.map(
+        lambda nb, p: nb.astype(p.dtype), new_base, params)
+    new_state = {"step": step, "m": m, "v": v}
+    if cfg.master_copy:
+        new_state["master"] = new_base
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,96 @@
+"""Jittable train / serve steps.
+
+Gradient accumulation microbatching: the microbatch count is the paper's
+block-size knob applied to the batch dimension (see
+repro.core.autotune.microbatch_count) — each microbatch's gradient reduce
+can overlap the next microbatch's compute (XLA latency-hiding scheduler);
+too many microbatches pay per-step overhead, too few lose overlap and blow
+activation memory.
+
+Gradient compression: optional bf16 (or f32->bf16 stochastic-free) cast of
+the accumulated gradient before the optimizer — under pjit this halves the
+bytes of the data-parallel all-reduce, visible in the dry-run collective
+parse.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train import optimizer as opt_mod
+
+
+def _tree_cast(tree, dtype):
+    return jax.tree.map(lambda a: a.astype(dtype), tree)
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: opt_mod.AdamWConfig,
+    *,
+    microbatches: int = 1,
+    grad_compression: Optional[str] = None,   # None | "bf16"
+    grad_shardings=None,   # optional sharding tree: force reduce-scatter
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        if grad_shardings is not None:
+            # pin grads to the param sharding immediately so GSPMD lowers the
+            # data-parallel reduction as reduce-scatter (not all-reduce+slice)
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            n = microbatches
+
+            def reshape(x):
+                b = x.shape[0]
+                assert b % n == 0, (b, n)
+                return x.reshape(n, b // n, *x.shape[1:])
+
+            mb = jax.tree.map(reshape, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mbatch):
+                acc, loss_sum = carry
+                loss, _, grads = grads_of(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n, acc, grads)
+                return (acc, loss_sum + loss / n), None
+
+            (grads, loss), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mb)
+            metrics = {}
+
+        if grad_compression == "bf16":
+            grads = _tree_cast(_tree_cast(grads, jnp.bfloat16), jnp.float32)
+
+        new_params, new_state, om = opt_mod.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        out = {"loss": loss, **{k: v for k, v in metrics.items()}, **om}
+        return new_params, new_state, out
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+    return decode_step

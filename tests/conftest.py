@@ -1,0 +1,5 @@
+import jax
+
+# Smoke tests and kernels run on the default single CPU device.  The
+# 512-device override lives ONLY in launch/dryrun.py (see the assignment).
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,97 @@
+"""Simulator: the paper's empirical laws must emerge from the event model."""
+
+import numpy as np
+import pytest
+
+from repro.core import atomic_sim as sim
+from repro.core.topology import AMD3970X, GOLD5225R, W3225R
+
+
+TASK = sim.UnitTask(1024, 1024, 1024)
+
+
+def test_u_shape():
+    """Latency vs block size is U-shaped (paper tables 1-3)."""
+    sweep = sim.sweep_block_sizes(W3225R, 4, TASK, seeds=2)
+    bs = sorted(sweep)
+    lat = [sweep[b] for b in bs]
+    best = int(np.argmin(lat))
+    assert 0 < best < len(bs) - 1, sweep
+    assert lat[0] > lat[best]
+    assert lat[-1] > lat[best]
+
+
+def test_block_1024_single_thread_effect():
+    """At B=N only one thread works: e2e ~ the full serial time,
+    independent of thread count (paper: B=1024 rows are flat)."""
+    n = 1024
+    e2 = sim.simulate_parallel_for(W3225R, 2, n, 1024, TASK).e2e_clocks
+    e8 = sim.simulate_parallel_for(W3225R, 8, n, 1024, TASK).e2e_clocks
+    assert abs(e2 - e8) / e2 < 0.15
+
+
+def test_best_block_decreases_with_threads():
+    b = [sim.best_block_size(W3225R, t, TASK, seeds=3) for t in (2, 4, 8)]
+    assert b[0] >= b[1] >= b[2], b
+    assert b[0] > b[2], b
+
+
+def test_best_block_increases_with_core_groups():
+    """Gold 5225R: 24 threads = 1 socket, 48 threads = 2 sockets (paper:
+    'the preferred block size increases by adding core groups')."""
+    t24 = sim.best_block_size(GOLD5225R, 24, sim.UnitTask(1024, 1024, 1024**2),
+                              seeds=3)
+    t48 = sim.best_block_size(GOLD5225R, 48, sim.UnitTask(1024, 1024, 1024**2),
+                              seeds=3)
+    assert t48 > t24, (t24, t48)
+
+
+def test_best_block_increases_with_groups_amd():
+    t8 = sim.best_block_size(AMD3970X, 8, sim.UnitTask(1024, 1024, 1024**4),
+                             seeds=3)
+    t32 = sim.best_block_size(AMD3970X, 32, sim.UnitTask(1024, 1024, 1024**4),
+                              seeds=3)
+    assert t32 >= t8, (t8, t32)
+
+
+def test_best_block_decreases_with_task_size():
+    """Bigger unit read/write/comp -> smaller best block (2 threads so the
+    floor effect does not bind)."""
+    small = sim.best_block_size(W3225R, 2, sim.UnitTask(64, 64, 1024), seeds=3)
+    big = sim.best_block_size(
+        W3225R, 2, sim.UnitTask(4096, 4096, 1024 ** 6), seeds=3)
+    assert big < small, (small, big)
+
+
+def test_bandwidth_saturation_large_writes():
+    """unit_write 2^16: threads stop helping (paper's AMD 2^16 table)."""
+    task = sim.UnitTask(1024, 2 ** 16, 1024 ** 6)
+    e8 = sim.simulate_parallel_for(AMD3970X, 8, 1024, 16, task).e2e_clocks
+    e32 = sim.simulate_parallel_for(AMD3970X, 32, 1024, 16, task).e2e_clocks
+    assert e32 > 0.5 * e8  # nowhere near 4x speedup
+
+
+def test_guided_vs_cost_model_static():
+    """The paper's comparison: static blocks at the simulator's own best
+    size beat Taskflow guided scheduling ON AVERAGE (the paper itself
+    reports 'several cases in which ParallelFor underperforms')."""
+    ratios = []
+    for task in (sim.UnitTask(1024, 1024, 1024 ** 3),
+                 sim.UnitTask(64, 1024, 2 ** 60),
+                 sim.UnitTask(4096, 1024, 2 ** 60),
+                 sim.UnitTask(1024, 2 ** 12, 2 ** 60)):
+        best_b = sim.best_block_size(W3225R, 8, task, seeds=3)
+        static = np.mean([sim.simulate_parallel_for(
+            W3225R, 8, 1024, best_b, task, seed=s).e2e_clocks
+            for s in range(3)])
+        guided = np.mean([sim.simulate_guided(
+            W3225R, 8, 1024, task, seed=s).e2e_clocks for s in range(3)])
+        ratios.append(static / guided)
+    assert np.mean(ratios) < 1.0, ratios
+
+
+def test_faa_clocks_tracked():
+    r = sim.simulate_parallel_for(W3225R, 4, 256, 4, TASK)
+    assert r.faa_calls >= 256 // 4
+    assert r.faa_clocks > 0
+    assert r.imbalance >= 0

@@ -1,0 +1,108 @@
+"""Attention & SSM layer invariants (chunk invariance is the paper's
+block-size-correctness property; hypothesis sweeps shapes)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+from repro.models import ssm
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    sq=st.sampled_from([8, 16, 33]),
+    g=st.sampled_from([1, 2, 4]),
+    hkv=st.sampled_from([1, 2]),
+    d=st.sampled_from([8, 32]),
+    bk=st.sampled_from([4, 8, 64]),
+    causal=st.booleans(),
+)
+def test_chunked_attention_matches_naive(b, sq, g, hkv, d, bk, causal):
+    hq = g * hkv
+    ks = jax.random.split(jax.random.PRNGKey(sq * d + bk), 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, d))
+    k = jax.random.normal(ks[1], (b, sq, hkv, d))
+    v = jax.random.normal(ks[2], (b, sq, hkv, d))
+    o1 = A.naive_attention(q, k, v, causal=causal)
+    o2 = A.chunked_attention(q, k, v, causal=causal, block_k=bk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_chunked_attention_kv_len_mask():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, s, h, d = 2, 32, 2, 16
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    kv_len = jnp.array([5, 20], jnp.int32)
+    # decode semantics: causal window open to the whole cache; the per-batch
+    # kv_len mask does the truncation (q_offset is the scalar suffix align)
+    o = A.chunked_attention(q, k, v, causal=True, block_k=8,
+                            kv_len=kv_len, q_offset=s - 1)
+    # ground truth from truncated attention per batch entry
+    for i, L in enumerate([5, 20]):
+        r = A.naive_attention(q[i:i+1], k[i:i+1, :L], v[i:i+1, :L],
+                              causal=False)
+        np.testing.assert_allclose(np.asarray(o[i]), np.asarray(r[0]),
+                                   atol=2e-5)
+
+
+def test_attention_cache_incremental_equals_full():
+    cfg = A.AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8)
+    p = A.attn_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 32))
+    full, _ = A.attn_apply(p, cfg, x)
+    cache = A.init_kv_cache(cfg, 2, 16, jnp.float32)
+    pre, cache = A.attn_apply(p, cfg, x[:, :6], cache=cache)
+    outs = [pre]
+    for t in range(6, 10):
+        o, cache = A.attn_apply(p, cfg, x[:, t:t+1], cache=cache)
+        outs.append(o)
+    inc = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(inc), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunk=st.sampled_from([4, 8, 16, 32, 64]))
+def test_ssd_chunk_invariance_property(chunk):
+    cfg = ssm.SSMConfig(d_model=32, d_state=16, headdim=8, expand=2)
+    p = ssm.ssm_init(jax.random.PRNGKey(0), cfg)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    y_ref, _ = ssm.ssm_apply(p, cfg, x, chunk=64)
+    y, _ = ssm.ssm_apply(p, cfg, x, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=5e-5)
+
+
+def test_ssm_decode_continuation():
+    cfg = ssm.SSMConfig(d_model=16, d_state=8, headdim=8, expand=2)
+    p = ssm.ssm_init(jax.random.PRNGKey(0), cfg)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(2), (1, 24, 16))
+    full, _ = ssm.ssm_apply(p, cfg, x, chunk=8)
+    cache = ssm.init_ssm_cache(cfg, 1)
+    pre, cache = ssm.ssm_apply(p, cfg, x[:, :16], cache=cache, chunk=8)
+    outs = [pre]
+    for t in range(16, 24):
+        o, cache = ssm.ssm_apply(p, cfg, x[:, t:t+1], cache=cache)
+        outs.append(o)
+    inc = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(inc), atol=5e-5)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE: scores depend only on relative distance — shifting q and k
+    positions together must not change q.k products."""
+    from repro.models import layers
+    d = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 1, d))
+    pos = jnp.arange(4)[None, :]
+    s0 = jnp.einsum("bqhd,bkhd->bqk",
+                    layers.apply_rope(q, pos), layers.apply_rope(k, pos))
+    s7 = jnp.einsum("bqhd,bkhd->bqk",
+                    layers.apply_rope(q, pos + 7),
+                    layers.apply_rope(k, pos + 7))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s7), atol=1e-4)

@@ -1,0 +1,191 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs ref oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.mamba_ssd.ops import ssd
+from repro.kernels.mamba_ssd.ref import ssd_ref
+from repro.kernels.moe_gmm.kernel import gmm
+from repro.kernels.moe_gmm.ops import expert_ffn
+from repro.kernels.moe_gmm.ref import expert_ffn_ref, gmm_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,sq,skv,hq,hkv,d,causal,bq,bk",
+    [
+        (1, 32, 32, 2, 2, 16, True, 8, 16),
+        (2, 64, 64, 4, 2, 32, True, 16, 16),
+        (1, 16, 64, 4, 1, 16, True, 8, 32),     # Sq < Skv suffix align
+        (2, 32, 32, 8, 8, 64, False, 32, 32),   # MHA, non-causal
+        (1, 128, 128, 4, 4, 128, True, 64, 64), # MXU-shaped head dim
+    ])
+def test_flash_attention_sweep(b, sq, skv, hq, hkv, d, causal, bq, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(b * sq + hq), 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), dtype)
+    o = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                        interpret=True)
+    r = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(r, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize(
+    "b,sq,skv,hq,hkv,d,causal,bq,bk",
+    [
+        (1, 32, 32, 2, 2, 16, True, 8, 16),
+        (2, 64, 64, 4, 2, 32, True, 16, 16),
+        (1, 16, 64, 4, 1, 16, True, 8, 32),   # GQA + suffix align
+        (2, 32, 32, 2, 2, 16, False, 16, 8),
+    ])
+def test_flash_attention_backward(b, sq, skv, hq, hkv, d, causal, bq, bk):
+    """custom_vjp flash backward kernels vs jax.grad of the naive oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(sq + hq), 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, d))
+    k = jax.random.normal(ks[1], (b, skv, hkv, d))
+    v = jax.random.normal(ks[2], (b, skv, hkv, d))
+
+    def loss_k(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=causal, block_q=bq,
+                                       block_k=bk, interpret=True) ** 2)
+
+    def loss_r(q, k, v):
+        return jnp.sum(flash_attention_ref(q, k, v, causal=causal) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=5e-4, rtol=1e-3)
+
+
+def test_flash_attention_block_size_invariance():
+    """Output must not depend on the ParallelFor block size — only latency
+    does (the paper's whole point)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 32))
+    k = jax.random.normal(ks[1], (2, 64, 2, 32))
+    v = jax.random.normal(ks[2], (2, 64, 2, 32))
+    outs = [np.asarray(flash_attention(q, k, v, block_q=bq, block_k=bk,
+                                       interpret=True))
+            for bq, bk in [(8, 8), (16, 32), (64, 64)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,d,ns",
+    [
+        (2, 64, 8, 2, 32, 4),
+        (1, 128, 4, 1, 16, 8),
+        (2, 64, 2, 2, 64, 1),
+        (3, 256, 16, 2, 128, 16),
+    ])
+def test_decode_attention_sweep(b, s, hq, hkv, d, ns, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(s + ns), 3)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    kv_len = jnp.asarray(
+        np.random.RandomState(0).randint(1, s + 1, (b,)), jnp.int32)
+    o = decode_attention(q, k, v, kv_len, num_splits=ns, interpret=True)
+    r = decode_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(r, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_decode_split_invariance():
+    """Split count (the block-size dual) must not change the result."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (2, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    kv_len = jnp.array([100, 37], jnp.int32)
+    outs = [np.asarray(decode_attention(q, k, v, kv_len, num_splits=ns,
+                                        interpret=True))
+            for ns in (1, 2, 8, 16)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize(
+    "b,s,h,p,g,n,chunk",
+    [
+        (2, 64, 4, 16, 1, 16, 16),
+        (1, 32, 2, 8, 2, 8, 8),
+        (2, 128, 4, 16, 1, 32, 32),
+        (1, 64, 8, 32, 1, 64, 64),   # single chunk
+    ])
+def test_ssd_sweep(b, s, h, p, g, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(b * s + h), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    b_in = jax.random.normal(ks[3], (b, s, g, n), dtype)
+    c_in = jax.random.normal(ks[4], (b, s, g, n), dtype)
+    y, st = ssd(x, dt, a, b_in, c_in, chunk=chunk, interpret=True)
+    yr, str_ = ssd_ref(x, dt, a, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(str_),
+                               atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "e,c,d,f,bc,bf,bd",
+    [
+        (4, 16, 32, 24, 8, 8, 16),
+        (2, 32, 16, 16, 16, 16, 16),
+        (3, 8, 8, 8, 8, 8, 8),
+        (1, 64, 64, 32, 32, 32, 32),
+    ])
+def test_moe_gmm_sweep(e, c, d, f, bc, bf, bd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(e * c + d), 2)
+    x = jax.random.normal(ks[0], (e, c, d), dtype)
+    w = jax.random.normal(ks[1], (e, d, f), dtype)
+    o = gmm(x, w, block_c=bc, block_f=bf, block_d=bd, interpret=True)
+    r = gmm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(r, np.float32),
+        atol=(1e-4 if dtype == jnp.float32 else 0.3),
+        rtol=(1e-4 if dtype == jnp.float32 else 3e-2))
+
+
+def test_moe_expert_ffn_matches_ref():
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = 0.3 * jax.random.normal(ks[0], (4, 16, 32))
+    gate = 0.3 * jax.random.normal(ks[1], (4, 32, 24))
+    up = 0.3 * jax.random.normal(ks[2], (4, 32, 24))
+    down = 0.3 * jax.random.normal(ks[3], (4, 24, 32))
+    o = expert_ffn(x, gate, up, down, interpret=True)
+    r = expert_ffn_ref(x, gate, up, down)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-4)
+
+
+def test_ssd_chunk_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    b, s, h, p, g, n = 1, 128, 2, 16, 1, 16
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    b_in = jax.random.normal(ks[3], (b, s, g, n))
+    c_in = jax.random.normal(ks[4], (b, s, g, n))
+    outs = [np.asarray(ssd(x, dt, a, b_in, c_in, chunk=c, interpret=True)[0])
+            for c in (16, 32, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4)

@@ -32,16 +32,17 @@ def run_suite(name: str, fns) -> list[dict]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="sim | cost | taskflow | device | roofline")
+                    help="sim | cost | taskflow | sched | device | roofline")
     args = ap.parse_args()
 
     from benchmarks import (cost_model_bench, device_knobs, dryrun_summary,
-                            sim_tables, taskflow_compare)
+                            scheduler_sweep, sim_tables, taskflow_compare)
 
     suites = {
         "sim": sim_tables.ALL,
         "cost": cost_model_bench.ALL,
         "taskflow": taskflow_compare.ALL,
+        "sched": scheduler_sweep.ALL,
         "device": device_knobs.ALL,
         "roofline": dryrun_summary.ALL,
     }

@@ -75,4 +75,23 @@ def compare_tables(params=None) -> list[dict]:
     return rows
 
 
-ALL = [compare_tables]
+def policy_comparison() -> list[dict]:
+    """All six registered policies on a real host run, side by side with
+    Taskflow's guided baseline — per-policy FAA and imbalance columns.
+
+    The simulator above prices platforms we don't have; this table measures
+    the scheduling side (claim counts, shared-counter traffic, balance) of
+    each registered policy on this host, at the cost model's block size."""
+    from benchmarks.scheduler_sweep import measure_policy
+    from repro.core.schedulers import available_schedulers
+
+    n, t = 1024, 8
+    feats = cm.WorkloadFeatures(core_groups=2, threads=t, unit_read=1024,
+                                unit_write=1024, unit_comp=1024)
+    b = cm.suggest_block_size(feats, n=n)
+    return [measure_policy(name, n=n, block=b, threads=t,
+                           table="vs_taskflow_policies", cost_inputs=feats)
+            for name in available_schedulers()]
+
+
+ALL = [compare_tables, policy_comparison]

@@ -56,6 +56,18 @@ def main():
     print("  ParallelFor block   :", cm.suggest_block_size(feats, n=1024),
           "(paper weights)")
 
+    # --- every registered scheduling policy, with FAA telemetry ---
+    from repro.core import parallel_for as pf
+    from repro.core.schedulers import available_schedulers
+    print("\nscheduler policies (n=1024, 4 threads, B=16):")
+    print(f"  {'policy':14s} {'faa_total':>9s} {'faa_shared':>10s} "
+          f"{'blocks':>6s} {'imbalance':>9s}")
+    for name in available_schedulers():
+        stats = pf.parallel_for_stats(lambda i: None, 1024, n_threads=4,
+                                      schedule=name, block_size=16)
+        print(f"  {name:14s} {stats.faa_total:9d} {stats.faa_shared:10d} "
+              f"{stats.blocks_claimed:6d} {stats.imbalance:9d}")
+
 
 if __name__ == "__main__":
     main()

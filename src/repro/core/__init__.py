@@ -1,6 +1,8 @@
 """Core: the paper's contribution — ParallelFor scheduling + the FAA cost
 model — as a first-class, reusable layer."""
 
-from repro.core import atomic_sim, autotune, cost_model, parallel_for, topology
+from repro.core import (atomic_sim, autotune, cost_model, parallel_for,
+                        schedulers, topology)
 
-__all__ = ["atomic_sim", "autotune", "cost_model", "parallel_for", "topology"]
+__all__ = ["atomic_sim", "autotune", "cost_model", "parallel_for",
+           "schedulers", "topology"]

@@ -1,0 +1,32 @@
+"""JAX version shims — single chokepoint for APIs that moved between 0.4.x
+and 0.5+, so kernels and shard_map call sites stay written against the
+current (documented) API.
+
+* ``shard_map``: top-level ``jax.shard_map(..., check_vma=)`` on 0.5+;
+  ``jax.experimental.shard_map.shard_map(..., check_rep=)`` on 0.4.x.
+* ``tpu_compiler_params``: ``pltpu.CompilerParams`` on 0.5+;
+  ``pltpu.TPUCompilerParams`` on 0.4.x.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """Version-portable jax.shard_map."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-portable pltpu.CompilerParams(...)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

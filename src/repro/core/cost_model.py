@@ -277,15 +277,73 @@ def paper_normalized_features(rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]
 
 def analytic_cost(
     n: int, block_size: float, faa_cost: float, per_item_cost: float,
-    threads: int, quota: float = 0.0,
+    threads: int, quota: float = 0.0, *, groups: int = 1,
+    faa_remote_cost: float = 0.0,
 ) -> float:
     """Paper's Cost(T,N,L) = N/B * L + O(N)/T, plus the imbalance term the
-    paper observes empirically (quota-jitter tail ~ one block per thread)."""
+    paper observes empirically (quota-jitter tail ~ one block per thread).
+
+    ``groups``/``faa_remote_cost`` extend L with the cross-core-group line
+    transfer (Schweizer et al.): with T threads spread over G groups, a
+    claim on the flat shared counter finds the line in a foreign group with
+    probability (G-1)/G and pays ``faa_remote_cost`` extra clocks on top of
+    the local ``faa_cost``.  Defaults (G=1, remote=0) reproduce the paper's
+    published single-term model exactly."""
     b = max(1.0, float(block_size))
-    sync = (n / b) * faa_cost
+    p_remote = (groups - 1.0) / groups if groups > 1 else 0.0
+    sync = (n / b) * (faa_cost + p_remote * faa_remote_cost)
     work = n * per_item_cost / threads
     imbalance = quota * b * per_item_cost  # tail: last block finishes late
     return sync + work + imbalance
+
+
+def analytic_hierarchical_cost(
+    n: int, block_size: float, faa_cost: float, per_item_cost: float,
+    threads: int, quota: float = 0.0, *, groups: int = 1,
+    faa_remote_cost: float = 0.0, fanout: int = 8,
+) -> float:
+    """Cost of the two-level ``hierarchical`` policy under the same model.
+
+    Every claim still pays a (group-local) ``faa_cost``, but only one in
+    ``fanout`` touches the shared counter and risks the cross-group
+    transfer; the price is a coarser shared granularity, so the jitter tail
+    scales with the super-block (``fanout * B``) instead of B.  Comparing
+    this against :func:`analytic_cost` at equal B is how the model ranks
+    ``hierarchical`` vs flat ``faa`` (see :func:`rank_schedules`)."""
+    b = max(1.0, float(block_size))
+    p_remote = (groups - 1.0) / groups if groups > 1 else 0.0
+    local = (n / b) * faa_cost
+    shared = (n / (b * fanout)) * p_remote * faa_remote_cost
+    work = n * per_item_cost / threads
+    imbalance = quota * b * fanout * per_item_cost
+    return local + shared + work + imbalance
+
+
+def rank_schedules(
+    n: int, block_size: float, faa_cost: float, per_item_cost: float,
+    threads: int, *, groups: int = 1, faa_remote_cost: float = 0.0,
+    quota: float = 0.35, fanout: int = 8,
+) -> list:
+    """[(policy, predicted_clocks)] sorted cheapest-first for the flat-FAA
+    family the analytic model covers: ``faa``, ``hierarchical``, ``static``.
+
+    ``static`` pays no sync but eats the full quota-jitter tail of its
+    N/T-sized ranges; ``faa`` pays a (possibly remote) FAA per block;
+    ``hierarchical`` trades shared-line traffic for a coarser tail.  On
+    multi-group topologies with expensive remote transfers the ranking
+    flips toward ``hierarchical`` — the paper's motivating regime."""
+    costs = {
+        "faa": analytic_cost(
+            n, block_size, faa_cost, per_item_cost, threads, quota,
+            groups=groups, faa_remote_cost=faa_remote_cost),
+        "hierarchical": analytic_hierarchical_cost(
+            n, block_size, faa_cost, per_item_cost, threads, quota,
+            groups=groups, faa_remote_cost=faa_remote_cost, fanout=fanout),
+        "static": analytic_cost(
+            n, max(1.0, n / max(1, threads)), 0.0, per_item_cost, threads,
+            quota),
+    }
+    return sorted(costs.items(), key=lambda kv: kv[1])
 
 
 def analytic_best_block(

@@ -7,83 +7,69 @@ until the counter passes ``N``. ``ParallelFor`` returns once all threads have
 drained — the caller is assured ``task`` ran exactly once for every
 ``i in [0, N)``.
 
-Schedulers provided (all exactly-once, all tested):
-
-* ``static``      — pre-partition [0, N) into T contiguous ranges (openmp static).
-* ``faa``         — the paper's dynamic FAA scheduler with a fixed block size.
-* ``guided``      — Taskflow's guided self-scheduling: each claim takes
-                    ``q * remaining`` with ``q = 0.5 / T``, degrading to
-                    single-iteration blocks when ``remaining < 4 * T``
-                    (paper, "Related work and comparison").
-* ``cost_model``  — the paper's contribution: ``faa`` with the block size
-                    predicted by :mod:`repro.core.cost_model`.
+Scheduling policies live in :mod:`repro.core.schedulers` — a registry, not a
+branch (``static``, ``faa``, ``guided``, ``cost_model``, ``hierarchical``,
+``stealing``; all exactly-once, all tested).  :func:`parallel_for_stats`
+returns the full :class:`~repro.core.schedulers.ScheduleStats` telemetry
+(FAA calls total / shared / per-thread, claim-size histogram, imbalance);
+:func:`parallel_for` is the seed-compatible wrapper returning the bare FAA
+count.
 
 On-device ParallelFor (the TPU adaptation) lives in
-:func:`device_parallel_for`: N work items block-cyclically sharded over a mesh
-axis with shard_map — the block size plays the identical role, and the FAA is
-replaced by deterministic block-cyclic claiming (contention-free).
+:func:`device_parallel_for`: N work items sharded over a mesh axis with
+shard_map, where the FAA is replaced by deterministic claiming — so each
+scheduling policy maps to a shard *layout* whose block size plays the
+identical role (see ``_device_block_size``).
 """
 
 from __future__ import annotations
 
-import itertools
-import threading
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model as _cm
+from repro.core import schedulers as _sched
+from repro.core.schedulers import (AtomicCounter, ScheduleStats, Scheduler,
+                                   ThreadPool)
+
+__all__ = [
+    "AtomicCounter",
+    "ThreadPool",
+    "parallel_for",
+    "parallel_for_stats",
+    "block_cyclic_assignment",
+    "device_parallel_for",
+    "grain_sizes",
+]
 
 
-class AtomicCounter:
-    """fetch_and_add with the memory semantics the paper relies on."""
+def parallel_for_stats(
+    task: Callable[[int], None],
+    n: int,
+    *,
+    pool: Optional[ThreadPool] = None,
+    n_threads: int = 4,
+    schedule: Union[str, Scheduler] = "faa",
+    block_size: Optional[int] = None,
+    cost_inputs: Optional[_cm.WorkloadFeatures] = None,
+) -> ScheduleStats:
+    """Run ``task(i)`` for every i in [0, n) under the named scheduling
+    policy; returns the run's full :class:`ScheduleStats` telemetry.
 
-    __slots__ = ("_value", "_lock")
-
-    def __init__(self, value: int = 0):
-        self._value = value
-        self._lock = threading.Lock()
-
-    def fetch_and_add(self, delta: int) -> int:
-        with self._lock:
-            old = self._value
-            self._value += delta
-            return old
-
-    @property
-    def value(self) -> int:
-        with self._lock:
-            return self._value
-
-
-class ThreadPool:
-    """A minimal pool with the enqueue/wait shape of the paper's snippet."""
-
-    def __init__(self, n_threads: int):
-        if n_threads < 1:
-            raise ValueError("need at least one thread")
-        self.n_threads = n_threads
-
-    def run(self, thread_task: Callable[[int], None]) -> None:
-        """Run ``thread_task(thread_id)`` on all threads; the calling thread
-        participates as thread 0 (as in the paper: ``thread_task()`` is also
-        invoked inline after enqueueing)."""
-        workers = [
-            threading.Thread(target=thread_task, args=(tid,))
-            for tid in range(1, self.n_threads)
-        ]
-        for w in workers:
-            w.start()
-        thread_task(0)
-        for w in workers:
-            w.join()
-
-
-def _run_block(task: Callable[[int], None], begin: int, end: int) -> None:
-    for i in range(begin, end):
-        task(i)
+    ``schedule`` is a registered policy name or a pre-configured
+    :class:`Scheduler` instance (e.g. ``HierarchicalScheduler(groups=8)``).
+    """
+    if n < 0:
+        raise ValueError("n must be >= 0")
+    sched = _sched.get_scheduler(schedule)
+    pool = pool or ThreadPool(n_threads)
+    if n == 0:
+        return _sched.empty_stats(sched.name, pool.n_threads)
+    return sched.run(task, n, pool, block_size=block_size,
+                     cost_inputs=cost_inputs)
 
 
 def parallel_for(
@@ -92,88 +78,17 @@ def parallel_for(
     *,
     pool: Optional[ThreadPool] = None,
     n_threads: int = 4,
-    schedule: str = "faa",
+    schedule: Union[str, Scheduler] = "faa",
     block_size: Optional[int] = None,
     cost_inputs: Optional[_cm.WorkloadFeatures] = None,
 ) -> int:
-    """Run ``task(i)`` for every i in [0, n). Returns the number of FAA calls
-    issued (the paper's cost driver) so callers/benchmarks can observe it."""
-    if n < 0:
-        raise ValueError("n must be >= 0")
-    if n == 0:
-        return 0
-    pool = pool or ThreadPool(n_threads)
-    t = pool.n_threads
-
-    if schedule == "static":
-        # openmp-static: contiguous ranges, zero FAA.
-        bounds = np.linspace(0, n, t + 1).astype(int)
-
-        def thread_task(tid: int) -> None:
-            _run_block(task, int(bounds[tid]), int(bounds[tid + 1]))
-
-        pool.run(thread_task)
-        return 0
-
-    faa_calls = AtomicCounter()
-
-    if schedule in ("faa", "cost_model"):
-        if schedule == "cost_model":
-            feats = cost_inputs or _cm.WorkloadFeatures(
-                core_groups=1, threads=t, unit_read=1024, unit_write=1024,
-                unit_comp=1024,
-            )
-            b = _cm.suggest_block_size(feats, n=n)
-        else:
-            b = block_size if block_size is not None else max(1, n // (8 * t))
-        b = max(1, min(int(b), n))
-        counter = AtomicCounter()
-
-        def thread_task(tid: int) -> None:
-            del tid
-            while True:
-                begin = counter.fetch_and_add(b)
-                faa_calls.fetch_and_add(1)
-                if begin >= n:
-                    return
-                _run_block(task, begin, min(n, begin + b))
-
-        pool.run(thread_task)
-        return faa_calls.value
-
-    if schedule == "guided":
-        # Taskflow for_each: chunk = q * remaining, q = 0.5 / T; once
-        # remaining < 4T fall back to single-iteration chunks.
-        q = 0.5 / t
-        counter = AtomicCounter()
-        lock = threading.Lock()
-
-        def claim() -> tuple[int, int]:
-            with lock:
-                begin = counter.value
-                if begin >= n:
-                    return n, n
-                remaining = n - begin
-                if remaining < 4 * t:
-                    size = 1
-                else:
-                    size = max(1, int(q * remaining))
-                counter.fetch_and_add(size)
-                faa_calls.fetch_and_add(1)
-                return begin, min(n, begin + size)
-
-        def thread_task(tid: int) -> None:
-            del tid
-            while True:
-                begin, end = claim()
-                if begin >= n:
-                    return
-                _run_block(task, begin, end)
-
-        pool.run(thread_task)
-        return faa_calls.value
-
-    raise ValueError(f"unknown schedule {schedule!r}")
+    """Seed-compatible wrapper: run and return the number of atomic FAA
+    calls issued (the paper's cost driver).  Use
+    :func:`parallel_for_stats` for the structured telemetry."""
+    return parallel_for_stats(
+        task, n, pool=pool, n_threads=n_threads, schedule=schedule,
+        block_size=block_size, cost_inputs=cost_inputs,
+    ).faa_total
 
 
 # ---------------------------------------------------------------------------
@@ -189,6 +104,28 @@ def block_cyclic_assignment(n: int, block_size: int, workers: int) -> np.ndarray
     return np.repeat(owner_of_block, block_size)[:n]
 
 
+def _device_block_size(
+    schedule: Union[str, Scheduler],
+    n: int,
+    workers: int,
+    block_size: Optional[int],
+    cost_inputs: Optional[_cm.WorkloadFeatures],
+) -> int:
+    """Map a scheduling policy onto the block-cyclic shard layout's block.
+
+    On device the claim is static, so a policy is exactly its layout; the
+    block size comes from the registered policy's
+    :meth:`~repro.core.schedulers.Scheduler.device_block_size` hook
+    (static → one contiguous range per worker; faa → the requested B;
+    guided → the mean guided chunk; cost_model → the trained model;
+    hierarchical → super-blocks stay with one worker; stealing and custom
+    policies → fine blocks for balance).
+    """
+    sched = _sched.get_scheduler(schedule)
+    b = int(sched.device_block_size(n, workers, block_size, cost_inputs))
+    return max(1, min(b, n))
+
+
 def device_parallel_for(
     fn: Callable[[jax.Array], jax.Array],
     items: jax.Array,
@@ -196,18 +133,21 @@ def device_parallel_for(
     mesh: jax.sharding.Mesh,
     axis: str = "data",
     block_size: Optional[int] = None,
+    schedule: str = "faa",
+    cost_inputs: Optional[_cm.WorkloadFeatures] = None,
 ) -> jax.Array:
     """Map ``fn`` over the leading axis of ``items`` with the work
-    block-cyclically distributed over ``axis`` of ``mesh``.
+    distributed over ``axis`` of ``mesh`` in the layout of ``schedule``.
 
-    The TPU-native ParallelFor: iterations = rows of ``items``; the claim is a
-    static block-cyclic layout (contention-free FAA replacement); the block
-    size controls the shard granularity exactly as the paper's B does. ``n``
-    must divide evenly across the axis after padding (handled here).
+    The TPU-native ParallelFor: iterations = rows of ``items``; the claim is
+    a static block-cyclic layout (contention-free FAA replacement); the
+    block size controls the shard granularity exactly as the paper's B does,
+    and the scheduling policy picks the layout (see ``_device_block_size``).
+    ``n`` must divide evenly across the axis after padding (handled here).
     """
     n = items.shape[0]
     workers = mesh.shape[axis]
-    b = block_size or max(1, n // workers)
+    b = _device_block_size(schedule, n, workers, block_size, cost_inputs)
     blocks = -(-n // b)
     pad = blocks * b - n
     if pad:
@@ -231,7 +171,9 @@ def device_parallel_for(
     def worker(chunk):
         return jax.vmap(jax.vmap(fn))(chunk)
 
-    out = jax.shard_map(
+    from repro.core import compat
+
+    out = compat.shard_map(
         worker, mesh=mesh, in_specs=(spec,), out_specs=spec, check_vma=False
     )(blocked)
     inv = np.argsort(perm, kind="stable")

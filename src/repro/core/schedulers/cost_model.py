@@ -1,0 +1,37 @@
+"""The paper's contribution: FAA claiming at the cost-model's block size."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import cost_model as _cm
+from repro.core.schedulers.base import register_scheduler
+from repro.core.schedulers.faa import FaaScheduler
+
+
+@register_scheduler
+class CostModelScheduler(FaaScheduler):
+    """`faa` with B predicted by the trained rational model
+    (:func:`repro.core.cost_model.suggest_block_size`).
+
+    ``cost_inputs`` (a :class:`repro.core.cost_model.WorkloadFeatures`)
+    describes the workload; when absent, a neutral single-group profile is
+    assumed — the model then mostly reacts to the thread count.
+    """
+
+    name = "cost_model"
+
+    def _block_size(self, n: int, t: int, block_size: Optional[int],
+                    cost_inputs) -> int:
+        if block_size is not None:
+            return block_size
+        feats = cost_inputs or _cm.WorkloadFeatures(
+            core_groups=1, threads=t, unit_read=1024, unit_write=1024,
+            unit_comp=1024,
+        )
+        return _cm.suggest_block_size(feats, n=n)
+
+    def device_block_size(self, n, workers, block_size=None,
+                          cost_inputs=None):
+        # explicit B wins, as on the host; else ask the trained model
+        return self._block_size(n, workers, block_size, cost_inputs)

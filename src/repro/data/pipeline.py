@@ -17,7 +17,7 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-from repro.core import autotune, parallel_for as pf
+from repro.core import autotune, cost_model as cm, parallel_for as pf
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +29,7 @@ class DataConfig:
     host_threads: int = 4
     prefetch: int = 2
     grain_size: Optional[int] = None     # None = cost-model choice
+    schedule: str = "faa"                # any registered scheduler policy
     straggler_timeout_s: float = 30.0
 
 
@@ -45,6 +46,9 @@ class SyntheticLM:
         self.cfg = cfg
         # zipf-ish ranks; clip to vocab
         self._ranks = None
+        # telemetry of the most recent batch's ParallelFor (FAA counts,
+        # imbalance) — observable by trainers/benchmarks
+        self.last_schedule_stats = None
 
     def example(self, index: int) -> np.ndarray:
         cfg = self.cfg
@@ -59,16 +63,29 @@ class SyntheticLM:
         cfg = self.cfg
         out = np.empty((cfg.global_batch, cfg.seq_len), np.int32)
         base = step * cfg.global_batch
-        grain = cfg.grain_size or autotune.data_grain_size(
-            cfg.global_batch, host_threads=cfg.host_threads,
-            bytes_per_example=4 * cfg.seq_len)
+        grain = cfg.grain_size
+        cost_inputs = None
+        if grain is None:
+            if cfg.schedule == "cost_model":
+                # hand the policy the same features data_grain_size uses and
+                # let it consult the model itself — an explicit block_size
+                # would silently override the predictor
+                cost_inputs = cm.WorkloadFeatures(
+                    core_groups=1, threads=cfg.host_threads,
+                    unit_read=4 * cfg.seq_len, unit_write=4 * cfg.seq_len,
+                    unit_comp=1024)
+            else:
+                grain = autotune.data_grain_size(
+                    cfg.global_batch, host_threads=cfg.host_threads,
+                    bytes_per_example=4 * cfg.seq_len)
 
         def task(i: int) -> None:
             out[i] = self.example(base + i)
 
-        pf.parallel_for(task, cfg.global_batch,
-                        n_threads=cfg.host_threads, schedule="faa",
-                        block_size=grain)
+        self.last_schedule_stats = pf.parallel_for_stats(
+            task, cfg.global_batch, n_threads=cfg.host_threads,
+            schedule=cfg.schedule, block_size=grain,
+            cost_inputs=cost_inputs)
         return {"tokens": out}
 
 

@@ -26,6 +26,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import compat
+
 NEG_INF = -1e30
 
 
@@ -106,7 +108,7 @@ def decode_attention_fwd(
             jax.ShapeDtypeStruct((b, hkv, ns, g, 1), jnp.float32),
             jax.ShapeDtypeStruct((b, hkv, ns, g, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,

@@ -10,12 +10,13 @@ greedy or temperature sampling.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import parallel_for as pf
 from repro.models.model import Model
 
 
@@ -25,6 +26,9 @@ class ServeConfig:
     eos_id: int = -1            # -1 = never stops early
     temperature: float = 0.0    # 0 = greedy
     cache_dtype: str = "float32"
+    slots: int = 4              # fixed batch slots for serve()
+    refill_schedule: str = "static"  # scheduler for the slot-refill packing
+    refill_threads: int = 4
 
 
 class Engine:
@@ -36,6 +40,8 @@ class Engine:
             lambda p, b: model.prefill(p, b, cfg.max_len,
                                        jnp.dtype(cfg.cache_dtype)))
         self._decode = jax.jit(model.decode_step)
+        # ScheduleStats of each slot-refill packing pass (see serve())
+        self.refill_stats: list = []
 
     def _sample(self, logits, key):
         if self.cfg.temperature <= 0.0:
@@ -49,14 +55,19 @@ class Engine:
         max_new_tokens: int,
         *,
         seed: int = 0,
+        live: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """batch: family-appropriate dict with "tokens" [B, S_prompt].
-        Returns generated tokens [B, max_new_tokens] (eos-padded)."""
+        Returns generated tokens [B, max_new_tokens] (eos-padded).
+
+        ``live``: optional [B] bool mask; False rows (padding slots) start
+        done, so they emit eos only and never defeat the early-exit."""
         key = jax.random.PRNGKey(seed)
         logits, cache = self._prefill(self.params, batch)
         b = batch["tokens"].shape[0]
         out = np.full((b, max_new_tokens), self.cfg.eos_id, np.int32)
-        done = np.zeros((b,), bool)
+        done = (np.zeros((b,), bool) if live is None
+                else ~np.asarray(live, bool))
         key, k0 = jax.random.split(key)
         tok = self._sample(logits, k0).astype(jnp.int32)
         for t in range(max_new_tokens):
@@ -68,3 +79,66 @@ class Engine:
             key, kt = jax.random.split(key)
             tok = self._sample(logits, kt).astype(jnp.int32)
         return out
+
+    def serve(
+        self,
+        prompts: Sequence[np.ndarray],
+        max_new_tokens: int,
+        *,
+        seed: int = 0,
+    ) -> list:
+        """Serve an arbitrary number of requests through ``cfg.slots`` fixed
+        batch slots; freed slots are refilled between generate() rounds.
+
+        The refill itself is host-side ParallelFor work — each free slot's
+        prompt is padded and packed into the batch's token array — and runs
+        under the scheduler named by ``cfg.refill_schedule`` (any registered
+        policy).  Per-round :class:`ScheduleStats` accumulate in
+        ``self.refill_stats``, so serving inherits the same FAA/imbalance
+        telemetry as every other ParallelFor site.
+
+        ``prompts``: 1-D int arrays (token ids).  Returns one generated
+        [max_new_tokens] array per prompt, in submission order.
+
+        Rounds are formed from same-length prompts only: ``prefill`` reads
+        the last position and there is no pad mask, so batching a short
+        prompt beside a longer one would condition it on pad tokens.  The
+        oldest pending request picks each round's length; its cohort fills
+        the remaining slots in submission order.
+        """
+        if self.cfg.slots < 1:
+            raise ValueError(f"ServeConfig.slots must be >= 1, "
+                             f"got {self.cfg.slots}")
+        pending = list(enumerate(np.asarray(p, np.int32) for p in prompts))
+        results: list = [None] * len(pending)
+        self.refill_stats = []
+        round_idx = 0
+        while pending:
+            width = int(pending[0][1].shape[0])
+            round_reqs = [r for r in pending
+                          if int(r[1].shape[0]) == width][: self.cfg.slots]
+            taken = {ridx for ridx, _ in round_reqs}
+            pending = [r for r in pending if r[0] not in taken]
+            # pad to the full slot count so the batch shape is constant per
+            # prompt width — one jit specialization per width, not per
+            # cohort size; unused slots carry zeros and are dropped below.
+            tokens = np.zeros((self.cfg.slots, width), np.int32)
+
+            def pack(j: int) -> None:
+                _, prompt = round_reqs[j]
+                tokens[j, : prompt.shape[0]] = prompt
+
+            self.refill_stats.append(pf.parallel_for_stats(
+                pack, len(round_reqs),
+                n_threads=max(1, min(self.cfg.refill_threads,
+                                     len(round_reqs))),
+                schedule=self.cfg.refill_schedule, block_size=1))
+            # fresh randomness per round: otherwise temperature sampling
+            # replays the identical key stream every round
+            live = np.arange(self.cfg.slots) < len(round_reqs)
+            out = self.generate({"tokens": tokens}, max_new_tokens,
+                                seed=seed + round_idx, live=live)
+            for j, (ridx, _) in enumerate(round_reqs):
+                results[ridx] = out[j]
+            round_idx += 1
+        return results

@@ -4,9 +4,11 @@ import threading
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import parallel_for as pf
+from repro.core.schedulers import available_schedulers
+
+ALL_SCHEDULES = list(available_schedulers())
 
 
 def _run(n, schedule, n_threads=4, block_size=7):
@@ -23,32 +25,17 @@ def _run(n, schedule, n_threads=4, block_size=7):
     return counts[:n]
 
 
-@pytest.mark.parametrize("schedule", ["static", "faa", "guided",
-                                      "cost_model"])
+@pytest.mark.parametrize("schedule", ALL_SCHEDULES)
 @pytest.mark.parametrize("n", [0, 1, 7, 100, 1024])
 def test_exactly_once(schedule, n):
     counts = _run(n, schedule)
     assert (counts == 1).all() if n else True
 
 
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(0, 2000), threads=st.integers(1, 8),
-       block=st.integers(1, 64),
-       schedule=st.sampled_from(["static", "faa", "guided"]))
-def test_exactly_once_property(n, threads, block, schedule):
-    """The paper's contract: task runs exactly once per i in [0, N)."""
-    counts = _run(n, schedule, n_threads=threads, block_size=block)
-    assert counts.sum() == n
-    if n:
-        assert (counts == 1).all()
-
-
 def test_faa_call_count_scales_inverse_with_block():
     """The cost driver: #FAA ≈ N/B + T (each thread's drain probe)."""
     n = 1024
     for b in (1, 8, 64):
-        calls = []
-
         def task(i):
             pass
 
@@ -85,3 +72,75 @@ def test_device_parallel_for_matches_vmap():
                                  axis="data", block_size=5)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(items) * 2 + 1)
+
+
+@pytest.mark.parametrize("schedule", ALL_SCHEDULES)
+def test_device_parallel_for_all_schedules(schedule):
+    """Every policy maps to a correct shard layout on device."""
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    items = jnp.arange(41, dtype=jnp.float32)
+    out = pf.device_parallel_for(lambda x: x * 3 - 2, items, mesh=mesh,
+                                 axis="data", schedule=schedule)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(items) * 3 - 2)
+
+
+def test_device_parallel_for_rejects_unknown_schedule():
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_host_mesh
+
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        pf.device_parallel_for(lambda x: x, jnp.arange(8.0),
+                               mesh=make_host_mesh(), schedule="bogus")
+
+
+def test_device_parallel_for_custom_policy_inherits_layout():
+    """A registered custom policy works on device via the default
+    device_block_size hook — the registry drives both paths."""
+    import jax.numpy as jnp
+    from repro.core import schedulers as sched
+    from repro.launch.mesh import make_host_mesh
+
+    @sched.register_scheduler(name="_custom_dev")
+    class Custom(sched.Scheduler):
+        name = "_custom_dev"
+
+        def run(self, task, n, pool, *, block_size=None, cost_inputs=None):
+            rec = sched.Recorder(pool.n_threads)
+            for i in range(n):
+                task(i)
+            rec.claim(0, n)
+            return rec.stats(self.name, n, block_size)
+
+    try:
+        items = jnp.arange(23.0)
+        out = pf.device_parallel_for(lambda x: x + 1, items,
+                                     mesh=make_host_mesh(),
+                                     schedule="_custom_dev")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(items) + 1)
+    finally:
+        sched.base._REGISTRY.pop("_custom_dev", None)
+
+
+# ---------------------------------------------------------------------------
+# Property-based sweep (defined only when hypothesis is available, so the
+# deterministic tests above still run without it)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    pass
+else:
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(0, 2000), threads=st.integers(1, 8),
+           block=st.integers(1, 64),
+           schedule=st.sampled_from(ALL_SCHEDULES))
+    def test_exactly_once_property(n, threads, block, schedule):
+        """The paper's contract: task runs exactly once per i in [0, N)."""
+        counts = _run(n, schedule, n_threads=threads, block_size=block)
+        assert counts.sum() == n
+        if n:
+            assert (counts == 1).all()

@@ -1,0 +1,284 @@
+"""Scheduler subsystem: exactly-once on edge cases, ScheduleStats
+invariants, registry error paths, hierarchical's shared-FAA reduction, and
+the extended analytic cost model."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import parallel_for as pf
+from repro.core import schedulers as sched
+from repro.core.schedulers import (HierarchicalScheduler, ScheduleStats,
+                                   Scheduler, StealingScheduler,
+                                   available_schedulers, get_scheduler,
+                                   register_scheduler)
+
+ALL = list(available_schedulers())
+
+# n < threads, n == 1, n not divisible by block, n == block boundary
+EDGE_CASES = [(0, 4, 7), (1, 4, 7), (3, 8, 7), (7, 4, 7), (100, 4, 7),
+              (17, 4, 5), (64, 4, 16), (1024, 8, 16)]
+
+
+def _run_stats(n, schedule, n_threads, block_size) -> tuple:
+    counts = np.zeros(max(n, 1), np.int64)
+    lock = threading.Lock()
+
+    def task(i):
+        assert 0 <= i < n
+        with lock:
+            counts[i] += 1
+
+    stats = pf.parallel_for_stats(task, n, n_threads=n_threads,
+                                  schedule=schedule, block_size=block_size)
+    return counts[:n], stats
+
+
+@pytest.mark.parametrize("schedule", ALL)
+@pytest.mark.parametrize("n,threads,block", EDGE_CASES)
+def test_exactly_once_edge_cases(schedule, n, threads, block):
+    counts, stats = _run_stats(n, schedule, threads, block)
+    assert counts.sum() == n
+    if n:
+        assert (counts == 1).all()
+
+
+@pytest.mark.parametrize("schedule", ALL)
+@pytest.mark.parametrize("n,threads,block", EDGE_CASES)
+def test_stats_invariants(schedule, n, threads, block):
+    """Sum of per-thread items == n; histogram totals match; FAA counters
+    are internally consistent."""
+    _, stats = _run_stats(n, schedule, threads, block)
+    assert isinstance(stats, ScheduleStats)
+    assert stats.schedule == schedule
+    assert stats.n == n and stats.n_threads == threads
+    assert int(stats.items_per_thread.sum()) == n
+    assert sum(size * cnt for size, cnt in stats.claim_sizes.items()) == n
+    assert stats.blocks_claimed == sum(stats.claim_sizes.values())
+    assert stats.faa_total == int(stats.faa_per_thread.sum())
+    assert stats.faa_shared == int(stats.faa_shared_per_thread.sum())
+    assert stats.faa_shared <= stats.faa_total
+    assert stats.imbalance >= 0
+    row = stats.as_row()
+    assert row["schedule"] == schedule and row["faa_total"] == stats.faa_total
+
+
+def test_faa_count_matches_counter_law():
+    """faa: shared FAAs == ceil(N/B) + T (one drain probe per thread)."""
+    n, t, b = 1024, 4, 16
+    _, stats = _run_stats(n, "faa", t, b)
+    assert stats.faa_shared == -(-n // b) + t
+    assert stats.faa_total == stats.faa_shared
+
+
+def test_hierarchical_fewer_shared_faas_than_flat():
+    """The tentpole property: at equal B, hierarchical touches the shared
+    counter strictly less often than flat faa."""
+    n, t, b = 1024, 8, 16
+    _, flat = _run_stats(n, "faa", t, b)
+    _, hier = _run_stats(n, "hierarchical", t, b)
+    assert hier.faa_shared < flat.faa_shared
+    # claims stay fine-grained: local FAAs still cover every block
+    assert hier.faa_total >= -(-n // b)
+
+
+def test_hierarchical_respects_groups_and_fanout():
+    n, t, b = 512, 8, 8
+    s = HierarchicalScheduler(groups=4, fanout=4)
+    _, stats = _run_stats(n, s, t, b)
+    # shared claims bounded by superblock count + one probe per thread
+    assert stats.faa_shared <= -(-n // (b * 4)) + t
+    with pytest.raises(ValueError, match="fanout"):
+        HierarchicalScheduler(fanout=1)
+
+
+def test_cost_model_schedule_picks_model_block():
+    """With block_size=None the trained model chooses B — the one host
+    path where cost_model differs from faa."""
+    n, t = 1024, 8
+    feats = cm.WorkloadFeatures(core_groups=2, threads=t, unit_read=1024,
+                                unit_write=1024, unit_comp=1024)
+    counts = np.zeros(n, np.int64)
+    lock = threading.Lock()
+
+    def task(i):
+        with lock:
+            counts[i] += 1
+
+    stats = pf.parallel_for_stats(task, n, n_threads=t,
+                                  schedule="cost_model", block_size=None,
+                                  cost_inputs=feats)
+    assert (counts == 1).all()
+    expected_b = cm.suggest_block_size(feats, n=n)
+    assert stats.block_size == expected_b
+    assert expected_b in stats.claim_sizes  # the model's B was claimed
+    # and it actually drove the FAA count
+    assert stats.faa_shared == -(-n // expected_b) + t
+
+
+def test_stealing_uses_no_atomics():
+    n, t, b = 1024, 8, 16
+    _, stats = _run_stats(n, "stealing", t, b)
+    assert stats.faa_total == 0
+    assert stats.faa_shared == 0
+    assert stats.steals >= 0
+
+
+def test_static_zero_faa_zero_imbalance_probe():
+    _, stats = _run_stats(1000, "static", 4, None)
+    assert stats.faa_total == 0
+    # contiguous equal split: at most one item of imbalance
+    assert stats.imbalance <= 1
+
+
+def test_parallel_for_wrapper_matches_stats():
+    n, t, b = 512, 4, 8
+
+    def task(i):
+        pass
+
+    calls = pf.parallel_for(task, n, n_threads=t, schedule="faa",
+                            block_size=b)
+    stats = pf.parallel_for_stats(task, n, n_threads=t, schedule="faa",
+                                  block_size=b)
+    assert calls == stats.faa_total
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_all_six():
+    assert set(ALL) >= {"static", "faa", "guided", "cost_model",
+                        "hierarchical", "stealing"}
+
+
+def test_registry_unknown_name_lists_available():
+    with pytest.raises(ValueError, match="hierarchical"):
+        get_scheduler("nope")
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        pf.parallel_for_stats(lambda i: None, 4, schedule="nope")
+
+
+def test_registry_duplicate_rejected_and_override():
+    class Dup(Scheduler):
+        name = "faa"
+
+        def run(self, task, n, pool, *, block_size=None, cost_inputs=None):
+            raise NotImplementedError
+
+    with pytest.raises(ValueError, match="already registered"):
+        register_scheduler(Dup)
+    # override under a scratch name, then restore by overriding back
+    register_scheduler(Dup, name="_scratch")
+    try:
+        with pytest.raises(ValueError):
+            register_scheduler(Dup, name="_scratch")
+        register_scheduler(Dup, name="_scratch", override=True)
+    finally:
+        sched.base._REGISTRY.pop("_scratch", None)
+
+
+def test_registry_nameless_rejected():
+    class NoName(Scheduler):
+        def run(self, task, n, pool, *, block_size=None, cost_inputs=None):
+            raise NotImplementedError
+
+    with pytest.raises(ValueError, match="name"):
+        register_scheduler(NoName)
+
+
+def test_custom_scheduler_roundtrip():
+    """A user policy registered via the decorator is reachable by name from
+    parallel_for and reports honest stats."""
+
+    @register_scheduler(name="_reverse_static")
+    class ReverseStatic(Scheduler):
+        name = "_reverse_static"
+
+        def run(self, task, n, pool, *, block_size=None, cost_inputs=None):
+            rec = sched.Recorder(pool.n_threads)
+            for i in reversed(range(n)):
+                task(i)
+            rec.claim(0, n)
+            return rec.stats(self.name, n, block_size)
+
+    try:
+        counts, stats = _run_stats(10, "_reverse_static", 2, None)
+        assert (counts == 1).all()
+        assert stats.items_per_thread[0] == 10
+    finally:
+        sched.base._REGISTRY.pop("_reverse_static", None)
+
+
+def test_scheduler_instance_passthrough():
+    counts, stats = _run_stats(64, StealingScheduler(seed=3), 4, 4)
+    assert (counts == 1).all()
+    assert stats.schedule == "stealing"
+
+
+def test_duck_typed_scheduler_passthrough():
+    """The protocol is duck-typed: any object with name + run works
+    without subclassing Scheduler."""
+
+    class Duck:
+        name = "duck"
+
+        def run(self, task, n, pool, *, block_size=None, cost_inputs=None):
+            rec = sched.Recorder(pool.n_threads)
+            for i in range(n):
+                task(i)
+            rec.claim(0, n)
+            return rec.stats(self.name, n, block_size)
+
+    counts, stats = _run_stats(12, Duck(), 2, None)
+    assert (counts == 1).all()
+    assert stats.schedule == "duck"
+
+
+def test_negative_n_rejected():
+    with pytest.raises(ValueError, match=">= 0"):
+        pf.parallel_for_stats(lambda i: None, -1)
+
+
+# ---------------------------------------------------------------------------
+# Extended analytic cost model
+# ---------------------------------------------------------------------------
+
+def test_analytic_cost_groups_term_backward_compatible():
+    base = cm.analytic_cost(4096, 64, 300.0, 1500.0, 8, quota=0.35)
+    extended = cm.analytic_cost(4096, 64, 300.0, 1500.0, 8, quota=0.35,
+                                groups=1, faa_remote_cost=500.0)
+    assert base == extended  # G=1 -> no remote transfers possible
+
+
+def test_analytic_cost_remote_term_raises_flat_cost():
+    flat = cm.analytic_cost(4096, 64, 300.0, 1500.0, 8, groups=1)
+    multi = cm.analytic_cost(4096, 64, 300.0, 1500.0, 8, groups=4,
+                             faa_remote_cost=500.0)
+    assert multi > flat
+
+
+def test_cost_model_ranks_hierarchical_above_flat_when_remote_expensive():
+    """The paper's motivating regime: many groups, slow interconnect —
+    the model must prefer hierarchical claiming over the flat counter."""
+    kw = dict(groups=8, faa_remote_cost=2000.0, quota=0.05)
+    flat = cm.analytic_cost(4096, 16, 100.0, 50.0, 32, 0.05,
+                            groups=8, faa_remote_cost=2000.0)
+    hier = cm.analytic_hierarchical_cost(4096, 16, 100.0, 50.0, 32, 0.05,
+                                         groups=8, faa_remote_cost=2000.0)
+    assert hier < flat
+    ranking = cm.rank_schedules(4096, 16, 100.0, 50.0, 32, **kw)
+    names = [name for name, _ in ranking]
+    assert names.index("hierarchical") < names.index("faa")
+
+
+def test_cost_model_keeps_flat_on_single_group():
+    """One core group: no remote penalty, so hierarchical's extra tail
+    makes flat faa at least as good."""
+    ranking = cm.rank_schedules(4096, 16, 100.0, 50.0, 8, groups=1,
+                                faa_remote_cost=0.0, quota=0.35)
+    costs = dict(ranking)
+    assert costs["faa"] <= costs["hierarchical"]

@@ -111,3 +111,5 @@ def fit_extended_features() -> list[dict]:
 
 
 ALL = [fit_on_paper_rows, fit_on_sim_table, fit_extended_features]
+# CI smoke: the paper-rows fit is seconds; the sim-table builds are not
+QUICK = [fit_on_paper_rows]

@@ -96,3 +96,5 @@ def host_parallel_for_overhead() -> list[dict]:
 
 
 ALL = [attention_chunk_ucurve, ssd_chunk_ucurve, host_parallel_for_overhead]
+# CI smoke: the host-side overhead table needs no device timing loops
+QUICK = [host_parallel_for_overhead]

@@ -3,6 +3,11 @@ extras).  Prints CSV rows and writes results/benchmarks/<table>.csv.
 
     PYTHONPATH=src python -m benchmarks.run             # everything
     PYTHONPATH=src python -m benchmarks.run --only sim  # one suite
+    PYTHONPATH=src python -m benchmarks.run --quick     # CI smoke subset
+
+``--quick`` runs each suite's ``QUICK`` list (falling back to ``ALL``
+where a suite has no cheap subset) — the CI job that keeps these scripts
+from rotting.
 """
 
 from __future__ import annotations
@@ -32,20 +37,27 @@ def run_suite(name: str, fns) -> list[dict]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="sim | cost | taskflow | sched | device | roofline")
+                    help="sim | cost | taskflow | sched | serve | device "
+                         "| roofline")
+    ap.add_argument("--quick", action="store_true",
+                    help="run each suite's QUICK subset (CI smoke)")
     args = ap.parse_args()
 
     from benchmarks import (cost_model_bench, device_knobs, dryrun_summary,
-                            scheduler_sweep, sim_tables, taskflow_compare)
+                            scheduler_sweep, serve_admission_sweep,
+                            sim_tables, taskflow_compare)
 
-    suites = {
-        "sim": sim_tables.ALL,
-        "cost": cost_model_bench.ALL,
-        "taskflow": taskflow_compare.ALL,
-        "sched": scheduler_sweep.ALL,
-        "device": device_knobs.ALL,
-        "roofline": dryrun_summary.ALL,
+    mods = {
+        "sim": sim_tables,
+        "cost": cost_model_bench,
+        "taskflow": taskflow_compare,
+        "sched": scheduler_sweep,
+        "serve": serve_admission_sweep,
+        "device": device_knobs,
+        "roofline": dryrun_summary,
     }
+    suites = {name: (getattr(m, "QUICK", m.ALL) if args.quick else m.ALL)
+              for name, m in mods.items()}
     if args.only:
         suites = {args.only: suites[args.only]}
 

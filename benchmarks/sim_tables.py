@@ -85,3 +85,5 @@ def amd_write_tables():
 
 ALL = [w3225r_comp_tables, gold_comp_tables, gold_coregroup_tables,
        amd_coregroup_table, gold_read_tables, amd_write_tables]
+# CI smoke: one platform's comp tables exercises the whole sim path
+QUICK = [w3225r_comp_tables]

@@ -95,3 +95,5 @@ def policy_comparison() -> list[dict]:
 
 
 ALL = [compare_tables, policy_comparison]
+# CI smoke: the measured policy table only (no simulator sweeps)
+QUICK = [policy_comparison]

@@ -18,6 +18,8 @@ policy                  shared-counter FAA behavior
 ======================  =====================================================
 """
 
+from repro.core.schedulers.admission import (AdmissionPlan, TidRecordingPool,
+                                             plan_admission)
 from repro.core.schedulers.base import (AtomicCounter, Recorder,
                                         ScheduleStats, Scheduler, ThreadPool,
                                         available_schedulers, empty_stats,
@@ -30,6 +32,7 @@ from repro.core.schedulers.static import StaticScheduler
 from repro.core.schedulers.stealing import StealingScheduler
 
 __all__ = [
+    "AdmissionPlan",
     "AtomicCounter",
     "CostModelScheduler",
     "FaaScheduler",
@@ -41,8 +44,10 @@ __all__ = [
     "StaticScheduler",
     "StealingScheduler",
     "ThreadPool",
+    "TidRecordingPool",
     "available_schedulers",
     "empty_stats",
     "get_scheduler",
+    "plan_admission",
     "register_scheduler",
 ]

@@ -67,16 +67,34 @@ class ThreadPool:
     def run(self, thread_task: Callable[[int], None]) -> None:
         """Run ``thread_task(thread_id)`` on all threads; the calling thread
         participates as thread 0 (as in the paper: ``thread_task()`` is also
-        invoked inline after enqueueing)."""
+        invoked inline after enqueueing).
+
+        A ``task`` that raises must surface to the caller, not die silently
+        inside a worker thread: every thread's first exception is captured,
+        the surviving threads drain normally (no policy blocks waiting on a
+        peer, so join() cannot deadlock), and the lowest-tid exception is
+        re-raised here.
+        """
+        errors: list = [None] * self.n_threads
+
+        def guarded(tid: int) -> None:
+            try:
+                thread_task(tid)
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                errors[tid] = e
+
         workers = [
-            threading.Thread(target=thread_task, args=(tid,))
+            threading.Thread(target=guarded, args=(tid,))
             for tid in range(1, self.n_threads)
         ]
         for w in workers:
             w.start()
-        thread_task(0)
+        guarded(0)
         for w in workers:
             w.join()
+        for e in errors:
+            if e is not None:
+                raise e
 
 
 @dataclasses.dataclass

@@ -1,7 +1,10 @@
-"""Serving launcher: load (or init) a model and run batched generation.
+"""Serving launcher: load (or init) a model and run batched generation,
+or drive the continuous-batching engine over a mixed-length workload.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
         --batch 4 --prompt-len 16 --tokens 32
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --requests 16 --tokens 24 --schedule hierarchical --slots 4
 """
 
 from __future__ import annotations
@@ -10,6 +13,7 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import get_config
@@ -27,6 +31,15 @@ def main():
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
+    # continuous-serving options (--requests > 0 switches to serve())
+    ap.add_argument("--requests", type=int, default=0,
+                    help="serve N mixed-length requests through the "
+                         "continuous engine instead of one generate()")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--schedule", default="faa",
+                    help="admission policy (any registered scheduler)")
+    ap.add_argument("--mode", default="continuous",
+                    choices=("continuous", "rounds"))
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -38,6 +51,24 @@ def main():
         tree, step = ckpt.restore(args.ckpt_dir, like={"params": params})
         params = tree["params"]
         print(f"loaded checkpoint step {step}")
+
+    if args.requests > 0:
+        eng = Engine(model, params, ServeConfig(
+            max_len=args.prompt_len + args.tokens + 1,
+            temperature=args.temperature, slots=args.slots,
+            refill_schedule=args.schedule, mode=args.mode))
+        rng = np.random.RandomState(0)
+        prompts = [rng.randint(1, cfg.vocab_size, int(l)).astype(np.int32)
+                   for l in rng.randint(max(2, args.prompt_len // 4),
+                                        args.prompt_len + 1,
+                                        args.requests)]
+        outs = eng.serve(prompts, args.tokens)
+        rep = eng.last_report
+        print(f"served {len(outs)} requests x <= {args.tokens} tokens "
+              f"[{args.mode}/{args.schedule}] in {rep.wall_s:.2f}s")
+        for k, v in rep.as_row().items():
+            print(f"  {k:24s} {v}")
+        return
 
     eng = Engine(model, params, ServeConfig(
         max_len=args.prompt_len + args.tokens + 1,

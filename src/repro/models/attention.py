@@ -241,17 +241,36 @@ def attn_apply(
     q_offset = None
     if cache is not None:
         length = cache["len"]
+        # Per-row cache lengths ([B] vector instead of scalar) are the
+        # continuous-batching serve path: every batch slot sits at its own
+        # position after an in-flight refill.  Single-token decode only —
+        # multi-token continuation at mixed offsets has no caller.
+        per_row = getattr(length, "ndim", 0) == 1
+        if per_row and s != 1:
+            raise ValueError(
+                "per-row cache lengths support single-token decode (s == 1); "
+                f"got a [{s}]-token step")
         if cfg.use_rope:
-            qpos = length + jnp.arange(s)
+            if per_row:
+                qpos = length[:, None] + jnp.arange(s)[None, :]
+                kpos = length[:, None] + jnp.arange(src.shape[1])[None, :]
+            else:
+                qpos = length + jnp.arange(s)
+                kpos = length + jnp.arange(src.shape[1])
             q = layers.apply_rope(q, jnp.broadcast_to(qpos, (b, s)),
                                   cfg.rope_theta)
-            kpos = length + jnp.arange(src.shape[1])
             k = layers.apply_rope(k, jnp.broadcast_to(kpos, (b, src.shape[1])),
                                   cfg.rope_theta)
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, length, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, length, 0, 0))
+        if per_row:
+            # each row writes its token at its own position
+            upd = lambda c, u, l: jax.lax.dynamic_update_slice(c, u, (l, 0, 0))
+            ck = jax.vmap(upd)(cache["k"], k.astype(cache["k"].dtype), length)
+            cv = jax.vmap(upd)(cache["v"], v.astype(cache["v"].dtype), length)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, length, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, length, 0, 0))
         new_cache = {"k": ck, "v": cv, "len": length + s}
         k, v = ck, cv
         from repro.distributed.sharding import active_policy
@@ -261,6 +280,13 @@ def attn_apply(
                 and k.shape[1] % pol.mesh.shape["model"] == 0):
             out = distributed_decode_attention(
                 q[:, 0], k, v, length + s, mesh=pol.mesh)[:, None]
+        elif per_row:
+            # s == 1: the causal mask (kpos <= row position) and the valid-
+            # length mask (kpos < length + 1) coincide, so kv_len alone
+            # carries the per-row masking.
+            out = attention(q, k, v, causal=False, block_k=block_k,
+                            kv_len=length + s, q_offset=0,
+                            use_kernel=use_kernel)
         else:
             # causal alignment: query i sits at absolute position length+i,
             # so q_offset is the (dynamic) pre-update cache length.

@@ -83,9 +83,18 @@ def mla_apply(
     h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     length = cache["len"] if cache is not None else 0
 
+    # per-row lengths ([B] vector): the continuous-batching decode path,
+    # where every batch slot sits at its own position (see attention.py)
+    per_row = getattr(length, "ndim", 0) == 1
+    if per_row and s != 1:
+        raise ValueError(
+            "per-row cache lengths support single-token decode (s == 1); "
+            f"got a [{s}]-token step")
+
     q = _project_q(p, cfg, x)
     qn, qr = jnp.split(q, [dn], axis=-1)
-    qpos = length + jnp.arange(s)
+    qpos = (length[:, None] + jnp.arange(s)[None, :] if per_row
+            else length + jnp.arange(s))
     qr = layers.apply_rope(qr, jnp.broadcast_to(qpos, (b, s)), cfg.rope_theta)
 
     ckv_kr = layers.dense(p["wkv_a"], x)
@@ -97,10 +106,17 @@ def mla_apply(
 
     new_cache = None
     if cache is not None:
-        cc = jax.lax.dynamic_update_slice(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, length, 0))
-        ck = jax.lax.dynamic_update_slice(
-            cache["kr"], kr.astype(cache["kr"].dtype), (0, length, 0))
+        if per_row:
+            upd = lambda c, u, l: jax.lax.dynamic_update_slice(c, u, (l, 0))
+            cc = jax.vmap(upd)(cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                               length)
+            ck = jax.vmap(upd)(cache["kr"], kr.astype(cache["kr"].dtype),
+                               length)
+        else:
+            cc = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, length, 0))
+            ck = jax.lax.dynamic_update_slice(
+                cache["kr"], kr.astype(cache["kr"].dtype), (0, length, 0))
         new_cache = {"ckv": cc, "kr": ck, "len": length + s}
 
     if cache is not None and s == 1:
@@ -126,6 +142,11 @@ def mla_apply(
             o_lat = attn_mod.distributed_decode_attention(
                 qq.astype(x.dtype)[:, 0], kk.astype(x.dtype),
                 vv.astype(x.dtype), length + s, mesh=pol.mesh)[:, None]
+        elif per_row:
+            # s == 1: kv_len subsumes the causal mask at each row's position
+            o_lat = attn_mod.chunked_attention(
+                qq.astype(x.dtype), kk.astype(x.dtype), vv.astype(x.dtype),
+                causal=False, block_k=block_k, kv_len=length + s, q_offset=0)
         else:
             o_lat = attn_mod.chunked_attention(
                 qq.astype(x.dtype), kk.astype(x.dtype), vv.astype(x.dtype),

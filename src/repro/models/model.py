@@ -417,3 +417,108 @@ class Model:
         x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
         logits = self._logits(params, x)[:, 0]
         return logits.astype(jnp.float32), cache
+
+    # ------------------------------------------- continuous-serving hooks
+
+    @property
+    def pad_safe_prefill(self) -> bool:
+        """Whether right-padded prompts can batch without contaminating the
+        real tokens.  True only where every cross-position op is causal
+        attention (pads are causally invisible to earlier positions): the
+        dense family.  MoE routes with batch-coupled expert capacity (pad
+        tokens would compete with real ones for slots), and SSM/hybrid
+        carry a recurrent state straight through the pads."""
+        return self.cfg.family == "dense"
+
+    def prefill_padded(self, params, batch, max_len: int,
+                       cache_dtype=jnp.bfloat16):
+        """Pad-masked prefill of right-padded mixed-length prompts.
+
+        ``batch["tokens"]`` [B, W] right-padded, ``batch["lengths"]`` [B]
+        true lengths (1 <= L <= W).  Returns (logits at each row's last
+        *real* token [B, V], cache whose ``len`` entries are per-row [B]
+        vectors set to the true lengths) — the cache shape a continuous
+        decode loop needs: each slot resumes at its own position, and the
+        pad positions' garbage K/V stay masked behind ``kv_len`` forever.
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        lengths = jnp.asarray(batch["lengths"], jnp.int32)
+        b = tokens.shape[0]
+        enc_len = (batch["frames"].shape[1] if cfg.family == "encdec"
+                   else None)
+        cache = self.init_cache(b, max_len, cache_dtype, enc_len=enc_len)
+        x = layers.embed(params["embed"], tokens).astype(cfg.dtype)
+        x = constrain(x, "act_btd")
+        x, cache, _ = self._backbone(params, x, batch, cache, train=False)
+        idx = jnp.clip(lengths - 1, 0, tokens.shape[1] - 1)[:, None, None]
+        x_last = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+        x_last = layers.rmsnorm(params["ln_f"], x_last, cfg.norm_eps)
+        logits = self._logits(params, x_last)[:, 0]
+        return logits.astype(jnp.float32), self.set_cache_lengths(cache,
+                                                                  lengths)
+
+    @staticmethod
+    def set_cache_lengths(cache, lengths) -> Any:
+        """Rewrite every ``len`` entry of a cache tree to per-row lengths.
+
+        Cache leaves are layer-stacked (``init_cache``'s ``stack``), so a
+        ``len`` leaf's existing shape is pure stack dims; the row vector is
+        broadcast behind them: ``[*stack] -> [*stack, B]``.
+        """
+        lengths = jnp.asarray(lengths, jnp.int32)
+
+        def walk(node):
+            if isinstance(node, dict):
+                return {k: (jnp.broadcast_to(lengths, v.shape + lengths.shape)
+                            if k == "len" else walk(v))
+                        for k, v in node.items()}
+            return node
+
+        return walk(cache)
+
+    def cache_batch_axes(self, *, per_row_len: bool = True) -> Any:
+        """Tree of ints: the batch-axis index of every cache leaf.
+
+        Leaves are layer-stacked, so the batch axis is not a fixed
+        position; probing two abstract batch sizes (eval_shape — nothing is
+        allocated) identifies it per leaf.  ``per_row_len`` probes the
+        continuous-serve cache form where ``len`` entries are [B] vectors
+        (see :meth:`set_cache_lengths`)."""
+
+        def make(bsz):
+            cache = self.init_cache(bsz, 8)
+            if per_row_len:
+                cache = self.set_cache_lengths(cache,
+                                               jnp.zeros(bsz, jnp.int32))
+            return cache
+
+        two = jax.eval_shape(lambda: make(2))
+        three = jax.eval_shape(lambda: make(3))
+
+        def axis(a, b):
+            diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                     if x != y]
+            if len(diffs) != 1:
+                raise ValueError(
+                    f"cannot identify batch axis: shapes {a.shape} vs "
+                    f"{b.shape} differ at {diffs}")
+            return diffs[0]
+
+        return jax.tree.map(axis, two, three)
+
+    def splice_cache(self, cache, prefill_cache, slot, *, axes, row: int = 0):
+        """Copy row ``row`` of a prefill cache into batch slot ``slot`` of a
+        (larger) serve cache — the in-flight refill of a freed decode slot.
+
+        ``axes`` is the tree from :meth:`cache_batch_axes`; both caches
+        must share every non-batch dim (allocate the prefill cache at the
+        same ``max_len``).  ``slot`` may be traced, so one jit of this
+        covers every slot."""
+
+        def sp(dst, src, ax):
+            piece = jax.lax.index_in_dim(src, row, ax, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(dst, piece, slot, ax)
+
+        return jax.tree.map(sp, cache, prefill_cache, axes)

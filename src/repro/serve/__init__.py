@@ -1,3 +1,16 @@
-from repro.serve import engine
+from repro.serve import engine, queue, telemetry
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.queue import Request, RequestQueue
+from repro.serve.telemetry import RequestTelemetry, ServeReport
 
-__all__ = ["engine"]
+__all__ = [
+    "Engine",
+    "Request",
+    "RequestQueue",
+    "RequestTelemetry",
+    "ServeConfig",
+    "ServeReport",
+    "engine",
+    "queue",
+    "telemetry",
+]

@@ -1,0 +1,101 @@
+"""Per-request and per-run serving telemetry.
+
+Serving is a ParallelFor wearing a trenchcoat, and its telemetry mirrors
+:class:`~repro.core.schedulers.ScheduleStats`: admission FAAs are the sync
+term, slot idle time is the imbalance term, and the per-request latencies
+are the end-to-end cost the paper's model prices.  ``ticks`` count decode
+steps (the engine's discrete clock — platform-independent, so tests can
+assert on them); ``*_s`` fields are wall-clock seconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.schedulers import ScheduleStats
+
+
+@dataclasses.dataclass
+class RequestTelemetry:
+    """One request's life: queued -> admitted (prefill) -> decoded -> done."""
+
+    rid: int
+    prompt_len: int
+    submit_tick: int = 0
+    admit_tick: int = -1          # decode tick at which prefill ran
+    finish_tick: int = -1
+    ttft_s: float = float("nan")  # submit -> first token, wall seconds
+    finish_s: float = float("nan")
+    decode_tokens: int = 0
+    stolen: bool = False          # admitted via slot steal, not its own plan
+
+    @property
+    def queue_wait_ticks(self) -> int:
+        """Decode steps spent waiting for a slot (the contended-admission
+        analogue of FAA queueing delay)."""
+        return max(0, self.admit_tick - self.submit_tick)
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        d = self.finish_s - self.ttft_s
+        return self.decode_tokens / d if d > 0 else float("nan")
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Aggregate of one serve() run — the row the admission sweep prints."""
+
+    schedule: str
+    mode: str
+    slots: int
+    n_requests: int
+    total_ticks: int
+    wall_s: float
+    total_tokens: int
+    admission: Optional[ScheduleStats]
+    admission_steals: int
+    requests: List[RequestTelemetry] = dataclasses.field(default_factory=list)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.total_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    def latency_percentile(self, q: float) -> float:
+        """q-th percentile of per-request wall latency (seconds)."""
+        lats = [r.latency_s for r in self.requests
+                if np.isfinite(r.latency_s)]
+        return float(np.percentile(lats, q)) if lats else float("nan")
+
+    @property
+    def mean_queue_wait_ticks(self) -> float:
+        if not self.requests:
+            return 0.0
+        return float(np.mean([r.queue_wait_ticks for r in self.requests]))
+
+    def as_row(self) -> dict:
+        """Flat dict for benchmark CSVs (shared-FAA columns included)."""
+        adm = self.admission
+        return {
+            "schedule": self.schedule,
+            "mode": self.mode,
+            "slots": self.slots,
+            "requests": self.n_requests,
+            "total_tokens": self.total_tokens,
+            "ticks": self.total_ticks,
+            "wall_s": round(self.wall_s, 4),
+            "tokens_per_s": round(self.tokens_per_s, 2),
+            "p50_latency_s": round(self.latency_percentile(50), 4),
+            "p95_latency_s": round(self.latency_percentile(95), 4),
+            "mean_queue_wait_ticks": round(self.mean_queue_wait_ticks, 2),
+            "admission_faa_shared": adm.faa_shared if adm else 0,
+            "admission_faa_total": adm.faa_total if adm else 0,
+            "admission_steals": self.admission_steals
+                                + (adm.steals if adm else 0),
+        }

@@ -1,0 +1,118 @@
+"""Property-based harness over every *registered* scheduling policy.
+
+The policy list comes from the registry at collection time — never a
+hard-coded list — so a future ``register_scheduler`` entry is covered the
+moment it lands.  Three contracts are randomized over
+``(n, n_threads, block_size)`` including the n=0, n=1, n<threads and
+block>n corners:
+
+1. exactly-once coverage of the iteration space (the paper's ParallelFor
+   semantics);
+2. :class:`ScheduleStats` telemetry consistency — the FAA decomposition
+   ``faa_total == faa_shared + group-local`` and the claim-size histogram
+   summing to n;
+3. a raising ``task`` propagates to the caller without deadlocking the
+   pool (worker exceptions must not die silently inside a thread).
+
+Plus the admission adapter: ``plan_admission`` inherits exactly-once over
+the request space from whichever policy drives it.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import parallel_for as pf
+from repro.core.schedulers import available_schedulers, plan_admission
+
+# registry-driven: every policy registered at collection time is swept
+ALL = list(available_schedulers())
+
+any_schedule = st.sampled_from(ALL)
+# weighted toward the corners: empty loop, single item, fewer items than
+# threads; the open range covers block > n and non-divisible blocks
+corner_n = st.sampled_from([0, 1, 2, 3, 5, 7])
+any_n = st.one_of(corner_n, st.integers(0, 500))
+
+
+def _run(n, schedule, threads, block):
+    counts = np.zeros(max(n, 1), np.int64)
+    lock = threading.Lock()
+
+    def task(i):
+        assert 0 <= i < n
+        with lock:
+            counts[i] += 1
+
+    stats = pf.parallel_for_stats(task, n, n_threads=threads,
+                                  schedule=schedule, block_size=block)
+    return counts[:n], stats
+
+
+@settings(max_examples=40, deadline=None)
+@given(schedule=any_schedule, n=any_n, threads=st.integers(1, 8),
+       block=st.integers(1, 600))
+def test_exactly_once_and_stats_invariants(schedule, n, threads, block):
+    counts, stats = _run(n, schedule, threads, block)
+    # the paper's contract: task(i) ran exactly once per i in [0, n)
+    assert counts.sum() == n
+    if n:
+        assert (counts == 1).all()
+    # telemetry consistency
+    assert stats.schedule == schedule
+    assert stats.n == n and stats.n_threads == threads
+    assert int(stats.items_per_thread.sum()) == n
+    # FAA decomposition: total = shared-counter + group-local, per thread
+    local = stats.faa_per_thread - stats.faa_shared_per_thread
+    assert (local >= 0).all()
+    assert stats.faa_total == stats.faa_shared + int(local.sum())
+    # claim-size histogram accounts for every iteration
+    assert sum(size * cnt for size, cnt in stats.claim_sizes.items()) == n
+    assert stats.blocks_claimed == sum(stats.claim_sizes.values())
+    assert stats.imbalance >= 0
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+@settings(max_examples=15, deadline=None)
+@given(schedule=any_schedule, n=st.integers(1, 300),
+       threads=st.integers(1, 8), block=st.integers(1, 32),
+       bad=st.integers(0, 10**9))
+def test_raising_task_propagates_without_deadlock(schedule, n, threads,
+                                                  block, bad):
+    """A task exception must reach the caller — from any thread, under any
+    policy — and the pool must still drain (join, not hang)."""
+    bad %= n
+
+    def task(i):
+        if i == bad:
+            raise _Boom(f"task {i}")
+
+    with pytest.raises(_Boom):
+        pf.parallel_for_stats(task, n, n_threads=threads,
+                              schedule=schedule, block_size=block)
+
+
+@settings(max_examples=30, deadline=None)
+@given(schedule=any_schedule, n=st.integers(0, 300),
+       slots=st.integers(1, 8),
+       block=st.one_of(st.none(), st.integers(1, 64)))
+def test_admission_plan_exactly_once_over_requests(schedule, n, slots,
+                                                   block):
+    """The serving analogue: every queued request is claimed by exactly one
+    slot, backlogs partition the queue, and the policy's FAA telemetry
+    stays internally consistent."""
+    plan = plan_admission(n, slots, schedule, block_size=block)
+    assert sorted(plan.claim_order) == list(range(n))
+    assert plan.assignment.shape == (n,)
+    if n:
+        assert plan.assignment.min() >= 0
+        assert plan.assignment.max() < slots
+    assert sum(len(plan.backlog_of(s)) for s in range(slots)) == n
+    assert plan.stats.faa_shared <= plan.stats.faa_total

@@ -1,0 +1,224 @@
+"""Continuous-batching serve engine: equivalence to per-request generate(),
+eos early-exit, head-of-line behavior, admission telemetry, bucketed
+prefill specialization, and the fixed rounds fallback."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.queue import Request
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("qwen2.5-3b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mixed_prompts(dense_setup):
+    cfg, _, _ = dense_setup
+    rng = np.random.RandomState(0)
+    lens = [8, 8, 5, 8, 5, 11, 3]
+    return [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+            for l in lens]
+
+
+@pytest.fixture(scope="module")
+def engine(dense_setup):
+    cfg, model, params = dense_setup
+    return Engine(model, params, ServeConfig(max_len=48, slots=2,
+                                             refill_schedule="faa"))
+
+
+def test_continuous_bit_identical_to_solo_generate(engine, mixed_prompts):
+    """Mixed prompt lengths, more requests than slots: every request's
+    continuous output equals its per-request generate() bit for bit."""
+    outs = engine.serve(mixed_prompts, 4)
+    assert len(outs) == len(mixed_prompts)
+    for i, p in enumerate(mixed_prompts):
+        solo = engine.generate({"tokens": np.asarray(p)[None, :]}, 4)
+        np.testing.assert_array_equal(solo[0], outs[i])
+
+
+def test_continuous_eos_early_exit_matches_generate(dense_setup,
+                                                    engine, mixed_prompts):
+    """Pick a token the model actually emits as eos: sequences must stop
+    early, stay eos-padded, and still match generate() exactly."""
+    cfg, model, params = dense_setup
+    # the second-step token of request 0 becomes the eos id — at least one
+    # request then exits early, and every comparison stays closed-loop
+    probe = engine.generate(
+        {"tokens": np.asarray(mixed_prompts[0])[None, :]}, 4)
+    eos = int(probe[0, 1])
+    eng = Engine(model, params,
+                 ServeConfig(max_len=48, slots=2, refill_schedule="faa",
+                             eos_id=eos))
+    outs = eng.serve(mixed_prompts, 4)
+    stopped_early = 0
+    for i, p in enumerate(mixed_prompts):
+        solo = eng.generate({"tokens": np.asarray(p)[None, :]}, 4)
+        np.testing.assert_array_equal(solo[0], outs[i])
+        hits = np.nonzero(outs[i] == eos)[0]
+        if hits.size and hits[0] < 3:
+            stopped_early += 1
+            # eos-padded after the exit point
+            assert (outs[i][hits[0]:] == eos).all()
+    assert stopped_early >= 1  # the probe guarantees request 0 qualifies
+
+
+def test_no_head_of_line_stall(dense_setup, mixed_prompts):
+    """A long sequence must not block refills of the other slots: every
+    short request is admitted (prefilled) while the long one still runs."""
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, ServeConfig(max_len=48, slots=2,
+                                            refill_schedule="faa"))
+    reqs = [Request(0, mixed_prompts[0], max_new_tokens=24)]
+    reqs += [Request(i, mixed_prompts[i], max_new_tokens=2)
+             for i in range(1, 5)]
+    outs = eng.serve(reqs, 24)
+    assert outs[0].shape == (24,)
+    assert all(o.shape == (2,) for o in outs[1:])
+    rep = eng.last_report
+    by_rid = {t.rid: t for t in rep.requests}
+    long_finish = by_rid[0].finish_tick
+    for rid in range(1, 5):
+        assert by_rid[rid].admit_tick < long_finish, (
+            f"request {rid} admitted at {by_rid[rid].admit_tick}, after the "
+            f"long request finished at {long_finish} — head-of-line stall")
+    # and they actually finished early too
+    assert max(by_rid[r].finish_tick for r in range(1, 5)) < long_finish
+
+
+def test_admission_runs_under_every_scheduler(engine, dense_setup,
+                                              mixed_prompts):
+    """Admission is registry-driven; results are policy-independent
+    (exactly-once), telemetry is policy-shaped (hierarchical/stealing
+    touch the shared admission counter less than flat faa)."""
+    cfg, model, params = dense_setup
+    baseline = engine.serve(mixed_prompts, 3)
+    shared = {}
+    for policy in ("faa", "hierarchical", "stealing"):
+        eng = Engine(model, params,
+                     ServeConfig(max_len=48, slots=2,
+                                 refill_schedule=policy))
+        outs = eng.serve(mixed_prompts, 3)
+        for a, b in zip(baseline, outs):
+            np.testing.assert_array_equal(a, b)
+        assert eng.refill_stats[0].schedule == policy
+        shared[policy] = eng.last_report.as_row()["admission_faa_shared"]
+    assert shared["hierarchical"] < shared["faa"]
+    assert shared["stealing"] == 0
+
+
+def test_prefill_bucket_specialization(dense_setup):
+    """Mixed lengths inside one bucket share a single prefill jit
+    specialization — the constant-shape contract."""
+    cfg, model, params = dense_setup
+    eng = Engine(model, params,
+                 ServeConfig(max_len=48, slots=2, refill_schedule="faa",
+                             prefill_buckets=(8, 16)))
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+               for l in (3, 5, 7, 8)]          # one bucket: width 8
+    outs = eng.serve(prompts, 3)
+    assert eng._prefill_padded._cache_size() == 1
+    prompts += [rng.randint(1, cfg.vocab_size, 12).astype(np.int32)]
+    eng.serve(prompts, 3)                       # adds the width-16 bucket
+    assert eng._prefill_padded._cache_size() == 2
+    # over-bucket prompts fail fast
+    with pytest.raises(ValueError, match="bucket"):
+        eng.serve([rng.randint(1, cfg.vocab_size, 20).astype(np.int32)], 2)
+
+
+def test_report_telemetry_consistency(engine, mixed_prompts):
+    outs = engine.serve(mixed_prompts, 4)
+    rep = engine.last_report
+    assert rep.n_requests == len(mixed_prompts)
+    assert rep.total_tokens == sum(len(o) for o in outs)
+    assert rep.total_ticks > 0 and rep.wall_s > 0
+    assert rep.tokens_per_s > 0
+    assert np.isfinite(rep.latency_percentile(50))
+    assert rep.latency_percentile(50) <= rep.latency_percentile(95)
+    row = rep.as_row()
+    assert row["mode"] == "continuous" and row["schedule"] == "faa"
+    assert row["admission_faa_shared"] >= 0
+    for t in rep.requests:
+        assert t.admit_tick >= 0 and t.finish_tick >= t.admit_tick
+        assert t.queue_wait_ticks >= 0
+
+
+def test_rounds_mixed_width_cohort_regression(dense_setup, mixed_prompts):
+    """The fixed head-of-line hazard of the rounds fallback: a cohort is
+    any ``slots`` consecutive requests — a short-width request no longer
+    strands free slots while different-width requests wait."""
+    cfg, model, params = dense_setup
+    eng = Engine(model, params,
+                 ServeConfig(max_len=48, slots=4, refill_schedule="faa",
+                             mode="rounds"))
+    prompts = [mixed_prompts[2], mixed_prompts[0], mixed_prompts[1]]
+    outs = eng.serve(prompts, 4)                 # lens [5, 8, 8]
+    # one mixed-width round, not a len-5 round followed by a len-8 round
+    assert len(eng.refill_stats) == 1
+    assert eng.refill_stats[0].n == 3
+    for i, p in enumerate(prompts):
+        solo = eng.generate({"tokens": np.asarray(p)[None, :]}, 4)
+        np.testing.assert_array_equal(solo[0], outs[i])
+
+
+def test_continuous_moe_mla_family(dense_setup):
+    """MoE + absorbed-MLA latent cache through the continuous engine: the
+    per-row MLA decode path and the capacity-bounded router.  With
+    slots * top_k <= 8 (the capacity floor) the batched router cannot
+    drop a choice a batch-of-1 would keep, so equivalence stays exact."""
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    model = Model(cfg)
+    assert not model.pad_safe_prefill   # expert capacity is batch-coupled
+    assert cfg.top_k * 2 <= 8
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(max_len=32, slots=2,
+                                            refill_schedule="faa"))
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+               for l in (6, 4, 6)]
+    outs = eng.serve(prompts, 3)
+    for i, p in enumerate(prompts):
+        solo = eng.generate({"tokens": np.asarray(p)[None, :]}, 3)
+        np.testing.assert_array_equal(solo[0], outs[i])
+
+
+def test_continuous_ssm_family_exact_length_path(dense_setup):
+    """Recurrent-state families can't pad prefill; the engine falls back to
+    exact-length specializations and stays bit-identical."""
+    cfg = get_config("mamba2-780m").reduced()
+    model = Model(cfg)
+    assert not model.pad_safe_prefill
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(max_len=32, slots=2,
+                                            refill_schedule="stealing"))
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+               for l in (6, 4, 6)]
+    outs = eng.serve(prompts, 3)
+    for i, p in enumerate(prompts):
+        solo = eng.generate({"tokens": np.asarray(p)[None, :]}, 3)
+        np.testing.assert_array_equal(solo[0], outs[i])
+
+
+def test_temperature_sampling_deterministic_per_seed(dense_setup,
+                                                     mixed_prompts):
+    cfg, model, params = dense_setup
+    eng = Engine(model, params,
+                 ServeConfig(max_len=48, slots=2, refill_schedule="faa",
+                             temperature=0.8))
+    a = eng.serve(mixed_prompts[:3], 3, seed=7)
+    b = eng.serve(mixed_prompts[:3], 3, seed=7)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)

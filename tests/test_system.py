@@ -99,16 +99,19 @@ def test_serve_engine_greedy_deterministic(tiny_setup):
 
 
 def test_serve_engine_slot_refill(tiny_setup):
-    """serve(): more requests than slots, refilled between rounds; the
-    refill packing runs under a registered scheduler and reports stats."""
+    """serve() rounds fallback: more requests than slots, refilled between
+    rounds; the refill packing runs under a registered scheduler and
+    reports stats.  (The continuous default is covered in
+    tests/test_serve_continuous.py.)"""
     cfg, model, data_cfg, _ = tiny_setup
     params = model.init(jax.random.PRNGKey(0))
     eng = Engine(model, params, ServeConfig(max_len=48, slots=2,
-                                            refill_schedule="faa"))
+                                            refill_schedule="faa",
+                                            mode="rounds"))
     rng = np.random.RandomState(0)
-    # ragged lengths: rounds must group same-length prompts (prefill has no
-    # pad mask).  Oldest request picks each round's width, so
-    # [8,8,5,8,5] with 2 slots -> rounds of 2 (len-8), 2 (len-5), 1 (len-8)
+    # ragged lengths: pad-masked prefill batches mixed widths, so cohorts
+    # are simply consecutive requests.  [8,8,5,8,5] with 2 slots ->
+    # rounds [8,8], [5,8], [5]
     lens = [8, 8, 5, 8, 5]
     prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
                for l in lens]

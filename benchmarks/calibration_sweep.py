@@ -1,0 +1,107 @@
+"""Online-calibration sweep: fit quality + event-model agreement tables.
+
+One row per (platform, threads, unit-task) cell comparing the freshly
+fitted rational model against the discrete-event simulator: where the
+model's block lands on the simulated latency curve, the sim-best block,
+and the rank correlation between the calibrated analytic cost and the
+simulated latencies.  The summary row asserts the tentpole property: the
+model fitted ONLY from measured/simulated points (never the published
+weights) ranks block sizes consistently with ``atomic_sim`` on all three
+paper topologies and keeps ``B* < N/T``.
+
+    PYTHONPATH=src python -m benchmarks.calibration_sweep            # full
+    PYTHONPATH=src python -m benchmarks.calibration_sweep --dry-run  # CI
+
+``--dry-run`` (the bench-smoke job) runs the fast simulate-only fit —
+no host microbenchmarks, no persisted calibration — and hard-asserts the
+consistency invariants, so a regression in the calibrator fails CI even
+on a 1-core runner.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core import runtime
+from repro.core.atomic_sim import UnitTask
+from repro.core.topology import AMD3970X, GOLD5225R, W3225R
+
+TABLE = "calibration_sweep"
+TOPOLOGIES = (W3225R, GOLD5225R, AMD3970X)
+N = 512
+# the sim-vs-analytic rank correlation floor and how far off the simulated
+# optimum the fitted model's block may land (latency ratio)
+MIN_SPEARMAN = 0.3
+MAX_LATENCY_RATIO = 3.0
+
+
+def _context(fast: bool, simulate_only: bool) -> runtime.TuningContext:
+    return runtime.calibrate(fast=fast, simulate_only=simulate_only,
+                             persist=False, install=False)
+
+
+def consistency_rows(ctx: runtime.TuningContext, *,
+                     assert_invariants: bool = True) -> list[dict]:
+    """One row per cell; asserts the block-ranking invariants by default."""
+    rows = []
+    tasks = (UnitTask(),
+             UnitTask(unit_read=4096, unit_write=1024, unit_comp=1024))
+    for topo in TOPOLOGIES:
+        for task in tasks:
+            t = topo.total_cores
+            row = runtime.ranking_consistency(ctx, topo, t, task, n=N)
+            ratio = (row["sim_at_model_block"]
+                     / max(row["sim_at_best_block"], 1e-9))
+            row.update(table=TABLE, source=ctx.source,
+                       fit_loss=round(ctx.fit_loss, 2),
+                       latency_ratio=round(ratio, 3))
+            rows.append(row)
+            if assert_invariants:
+                assert row["model_within_nt"], (
+                    f"{topo.name}: fitted B {row['model_block']} >= N/T "
+                    f"{N // t} — the paper's empirical bound is violated")
+                assert row["spearman_sim_vs_analytic"] >= MIN_SPEARMAN, (
+                    f"{topo.name}: calibrated analytic cost disagrees with "
+                    f"the event model (rank corr "
+                    f"{row['spearman_sim_vs_analytic']:.2f})")
+                assert ratio <= MAX_LATENCY_RATIO, (
+                    f"{topo.name}: model block {row['model_block']} costs "
+                    f"{ratio:.2f}x the sim optimum "
+                    f"{row['sim_best_block']}")
+    return rows
+
+
+def calibration_table() -> list[dict]:
+    """Full-fit consistency table (includes host measurement when the
+    machine has more than one core)."""
+    return consistency_rows(_context(fast=False, simulate_only=False))
+
+
+def calibration_table_quick() -> list[dict]:
+    """Fast simulate-only variant for --quick / CI."""
+    return consistency_rows(_context(fast=True, simulate_only=True))
+
+
+ALL = [calibration_table]
+QUICK = [calibration_table_quick]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="fast simulate-only fit + invariant asserts "
+                         "(the bench-smoke CI gate)")
+    args = ap.parse_args()
+    rows = (calibration_table_quick() if args.dry_run
+            else calibration_table())
+    keys = sorted({k for r in rows for k in r})
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+    print(f"# {len(rows)} cells; all ranking invariants held",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -38,14 +38,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="sim | cost | taskflow | sched | serve | device "
-                         "| roofline")
+                         "| roofline | calib")
     ap.add_argument("--quick", action="store_true",
                     help="run each suite's QUICK subset (CI smoke)")
     args = ap.parse_args()
 
-    from benchmarks import (cost_model_bench, device_knobs, dryrun_summary,
-                            scheduler_sweep, serve_admission_sweep,
-                            sim_tables, taskflow_compare)
+    from benchmarks import (calibration_sweep, cost_model_bench,
+                            device_knobs, dryrun_summary, scheduler_sweep,
+                            serve_admission_sweep, sim_tables,
+                            taskflow_compare)
 
     mods = {
         "sim": sim_tables,
@@ -55,6 +56,7 @@ def main() -> None:
         "serve": serve_admission_sweep,
         "device": device_knobs,
         "roofline": dryrun_summary,
+        "calib": calibration_sweep,
     }
     suites = {name: (getattr(m, "QUICK", m.ALL) if args.quick else m.ALL)
               for name, m in mods.items()}

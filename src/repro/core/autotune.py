@@ -51,13 +51,29 @@ def _aligned_candidates(limit: int, align: int = MXU) -> list[int]:
 def choose_block(
     n: int,
     workers: int,
-    overhead: float,
-    per_item_cost: float,
+    overhead: Optional[float] = None,
+    per_item_cost: Optional[float] = None,
     *,
     candidates: Optional[Sequence[int]] = None,
     jitter: float = 0.35,
 ) -> int:
-    """argmin over candidates of the paper's analytic cost."""
+    """argmin over candidates of the paper's analytic cost.
+
+    With ``overhead=None`` AND ``per_item_cost=None`` the choice is
+    delegated to the calibrated :class:`repro.core.runtime.TuningContext`
+    — measured L, cross-group penalty and all — so there is one
+    implementation and one answer.  Passing exactly one of the two is an
+    error: the context's terms are in simulator clocks and must not be
+    mixed with a caller's own unit system (e.g. seconds)."""
+    if (overhead is None) != (per_item_cost is None):
+        raise ValueError(
+            "pass both overhead and per_item_cost (one unit system), or "
+            "neither (the calibrated TuningContext supplies both)")
+    if overhead is None:
+        from repro.core import runtime  # lazy: runtime consults cost_model
+
+        return runtime.tuning().choose_block(
+            n, workers, candidates=candidates, jitter=jitter)
     cands = list(candidates) if candidates is not None else [
         2**i for i in range(int(np.log2(max(2, n))) + 1)
     ]
@@ -175,15 +191,20 @@ def microbatch_count(
     topo: TpuTopology = V5E_POD,
     step_flops: float = 1e15,
     multi_pod: bool = False,
+    launch_overhead: float = 25e-6,
 ) -> int:
     """Gradient-accumulation microbatches: more microbatches overlap the
     grads all-reduce with compute but pay per-microbatch launch + collective
-    latency; this is Cost(T,N,L) with N=global_batch and B=microbatch size."""
+    latency; this is Cost(T,N,L) with N=global_batch and B=microbatch size.
+
+    ``launch_overhead`` is the per-microbatch dispatch + collective-setup
+    cost (the L analogue); the trainer passes the calibrated
+    ``TuningContext`` measurement instead of the default estimate."""
     chips = topo.total_chips
     # ring all-reduce wall time of the full gradient (slowest link decides):
     link = topo.ici_bw if not multi_pod else topo.ici_bw / 4  # cross-pod hop
     allreduce = 2.0 * grad_bytes / (chips * link)
-    launch = 25e-6  # per-microbatch dispatch + collective setup (L analogue)
+    launch = launch_overhead  # per-microbatch dispatch + setup (L analogue)
     compute = step_flops / (chips * topo.peak_flops)
     candidates = [s for s in (1, 2, 4, 8, 16, 32) if s <= global_batch]
     # with s microbatches the reduce of microbatch i overlaps compute of i+1;
@@ -204,7 +225,15 @@ def data_grain_size(
     params: Optional[dict] = None,
 ) -> int:
     """Host data-pipeline grain — direct use of the learned model with the
-    paper's own feature semantics (the host IS a multicore CPU)."""
+    paper's own feature semantics (the host IS a multicore CPU).
+
+    With ``params=None`` the weights come from the process
+    :class:`repro.core.runtime.TuningContext` (calibrated on this host
+    when a calibration has run, the published weights otherwise)."""
+    if params is None:
+        from repro.core import runtime  # lazy: runtime consults cost_model
+
+        params = runtime.tuning().params
     feats = cm.WorkloadFeatures(
         core_groups=max(1, topo.n_pods),
         threads=host_threads,

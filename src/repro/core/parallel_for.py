@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model as _cm
+from repro.core import runtime as _rt
 from repro.core import schedulers as _sched
 from repro.core.schedulers import (AtomicCounter, ScheduleStats, Scheduler,
                                    ThreadPool)
@@ -55,21 +56,31 @@ def parallel_for_stats(
     schedule: Union[str, Scheduler] = "faa",
     block_size: Optional[int] = None,
     cost_inputs: Optional[_cm.WorkloadFeatures] = None,
+    layer: str = "parallel_for",
 ) -> ScheduleStats:
     """Run ``task(i)`` for every i in [0, n) under the named scheduling
     policy; returns the run's full :class:`ScheduleStats` telemetry.
 
     ``schedule`` is a registered policy name or a pre-configured
     :class:`Scheduler` instance (e.g. ``HierarchicalScheduler(groups=8)``).
+
+    With no explicit ``pool`` the call runs on the process-wide persistent
+    :class:`repro.core.runtime.WorkerPool` — steady-state calls spawn no
+    threads (the paper's per-claim amortization argument applied to the
+    per-call thread-creation overhead).  ``layer`` tags the run in the
+    pool's cross-layer telemetry (``repro.core.runtime.telemetry()``).
     """
     if n < 0:
         raise ValueError("n must be >= 0")
     sched = _sched.get_scheduler(schedule)
-    pool = pool or ThreadPool(n_threads)
+    pool = pool or _rt.get_pool().scoped(n_threads)
     if n == 0:
-        return _sched.empty_stats(sched.name, pool.n_threads)
-    return sched.run(task, n, pool, block_size=block_size,
-                     cost_inputs=cost_inputs)
+        stats = _sched.empty_stats(sched.name, pool.n_threads)
+    else:
+        stats = sched.run(task, n, pool, block_size=block_size,
+                          cost_inputs=cost_inputs)
+    _rt.record_stats(layer, stats)
+    return stats
 
 
 def parallel_for(
@@ -81,13 +92,14 @@ def parallel_for(
     schedule: Union[str, Scheduler] = "faa",
     block_size: Optional[int] = None,
     cost_inputs: Optional[_cm.WorkloadFeatures] = None,
+    layer: str = "parallel_for",
 ) -> int:
     """Seed-compatible wrapper: run and return the number of atomic FAA
     calls issued (the paper's cost driver).  Use
     :func:`parallel_for_stats` for the structured telemetry."""
     return parallel_for_stats(
         task, n, pool=pool, n_threads=n_threads, schedule=schedule,
-        block_size=block_size, cost_inputs=cost_inputs,
+        block_size=block_size, cost_inputs=cost_inputs, layer=layer,
     ).faa_total
 
 

@@ -37,6 +37,10 @@ class TidRecordingPool(ThreadPool):
     a task can discover *which slot claimed it* by looking its own OS thread
     ident up here — the only hook needed to turn any registered policy into
     an admission policy without changing the Scheduler protocol.
+
+    Kept as the standalone (thread-spawning) variant of the hook;
+    :func:`plan_admission` itself now runs on the persistent runtime pool,
+    whose :class:`repro.core.runtime.ScopedPool` records tids the same way.
     """
 
     def __init__(self, n_threads: int):
@@ -101,7 +105,11 @@ def plan_admission(
     if n == 0:
         return AdmissionPlan(slots, np.zeros(0, np.int64), [],
                              empty_stats(sched.name, slots))
-    pool = TidRecordingPool(slots)
+    # the admission pass runs on the shared persistent pool: slots are
+    # logical tids on warm workers, not freshly spawned threads
+    from repro.core import runtime as _rt
+
+    pool = _rt.get_pool().scoped(slots)
     assignment = np.full(n, -1, np.int64)
     order: list = []
     lock = threading.Lock()
@@ -120,4 +128,5 @@ def plan_admission(
         raise RuntimeError(
             f"scheduler {sched.name!r} left {missing} of {n} requests "
             f"unclaimed — exactly-once contract violated")
+    _rt.record_stats("admission", stats)
     return AdmissionPlan(slots, assignment, order, stats)

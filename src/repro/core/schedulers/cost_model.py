@@ -11,8 +11,14 @@ from repro.core.schedulers.faa import FaaScheduler
 
 @register_scheduler
 class CostModelScheduler(FaaScheduler):
-    """`faa` with B predicted by the trained rational model
-    (:func:`repro.core.cost_model.suggest_block_size`).
+    """`faa` with B predicted by the trained rational model.
+
+    The prediction routes through the process
+    :class:`repro.core.runtime.TuningContext` — so when an online
+    calibration has run (``repro.core.runtime.calibrate``), B comes from
+    coefficients refit on *this* platform's measured FAA latencies; with
+    no calibration the context falls back to the paper's published
+    weights.
 
     ``cost_inputs`` (a :class:`repro.core.cost_model.WorkloadFeatures`)
     describes the workload; when absent, a neutral single-group profile is
@@ -25,13 +31,15 @@ class CostModelScheduler(FaaScheduler):
                     cost_inputs) -> int:
         if block_size is not None:
             return block_size
+        from repro.core import runtime  # lazy: runtime imports schedulers
+
         feats = cost_inputs or _cm.WorkloadFeatures(
             core_groups=1, threads=t, unit_read=1024, unit_write=1024,
             unit_comp=1024,
         )
-        return _cm.suggest_block_size(feats, n=n)
+        return runtime.tuning().suggest_block(feats, n=n)
 
     def device_block_size(self, n, workers, block_size=None,
                           cost_inputs=None):
-        # explicit B wins, as on the host; else ask the trained model
+        # explicit B wins, as on the host; else ask the (calibrated) model
         return self._block_size(n, workers, block_size, cost_inputs)

@@ -3,9 +3,10 @@
 The host preprocessing stage (detokenization/packing stand-in) runs under
 :func:`repro.core.parallel_for.parallel_for` with the grain size chosen by
 the paper's cost model (`autotune.data_grain_size`) — the host IS a multicore
-CPU, so the paper applies literally here.  A prefetch thread keeps a bounded
-queue ahead of the training loop; a batch timeout provides straggler
-mitigation (slow shards are skipped and re-queued, never stall the step).
+CPU, so the paper applies literally here.  A prefetch producer on the shared
+runtime :class:`~repro.core.runtime.WorkerPool` keeps a bounded queue ahead
+of the training loop; a batch timeout provides straggler mitigation (slow
+shards are skipped, re-queued, and retried — never stalling the step).
 """
 
 from __future__ import annotations
@@ -13,11 +14,13 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from typing import Iterator, Optional
 
 import numpy as np
 
 from repro.core import autotune, cost_model as cm, parallel_for as pf
+from repro.core import runtime as rt
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,45 +88,81 @@ class SyntheticLM:
         self.last_schedule_stats = pf.parallel_for_stats(
             task, cfg.global_batch, n_threads=cfg.host_threads,
             schedule=cfg.schedule, block_size=grain,
-            cost_inputs=cost_inputs)
+            cost_inputs=cost_inputs, layer="data")
         return {"tokens": out}
 
 
 class PrefetchIterator:
-    """Bounded-queue prefetch + straggler mitigation.
+    """Bounded-queue prefetch + straggler mitigation, with a bounded step
+    range and real straggler re-queue.
 
-    If producing a batch exceeds `straggler_timeout_s` (slow shard / bad
-    host), the batch index is pushed to the back of the work list and the
-    next index is served instead — training never stalls on one straggler.
+    The producer runs on the process-wide persistent
+    :class:`repro.core.runtime.WorkerPool` (no per-iterator thread spawn).
+    If producing a batch exceeds ``straggler_timeout_s`` (slow shard / bad
+    host) its index is pushed to the back of the retry list and the next
+    index is served first — training never stalls on one straggler.
+    Skipped indices ARE retried: the next retry is produced after the next
+    fresh batch lands (and at the end of a bounded stream), and a retried
+    batch is delivered even if it is slow again (``stragglers`` records
+    every skip for telemetry).
+
+    ``num_steps`` bounds the stream: the producer emits steps
+    ``[start_step, start_step + num_steps)`` — retried stragglers
+    included — then finishes, and iteration raises ``StopIteration`` once
+    the queue drains.  ``num_steps=None`` keeps the unbounded stream.
     """
 
-    def __init__(self, dataset: SyntheticLM, start_step: int = 0):
+    def __init__(self, dataset: SyntheticLM, start_step: int = 0,
+                 num_steps: Optional[int] = None):
         self.dataset = dataset
         self.cfg = dataset.cfg
         self._q: queue.Queue = queue.Queue(maxsize=self.cfg.prefetch)
         self._step = start_step
+        self._end = None if num_steps is None else start_step + num_steps
         self._stop = threading.Event()
-        self._skipped: list[int] = []
-        self._thread = threading.Thread(target=self._producer, daemon=True)
-        self._thread.start()
+        self._done = threading.Event()
+        self._retry: list[int] = []
+        self.stragglers: list[int] = []   # every skipped (then retried) step
+        # done fires after the worker is idle again, so a close() followed
+        # by new pool work never races the idle accounting into a spawn
+        rt.get_pool().submit(self._producer, on_done=self._done.set)
+
+    def _next_index(self, step: int, fresh_since_retry: int):
+        """(index, is_retry, next_step): retries drain after each fresh
+        batch, and unconditionally once the fresh range is exhausted."""
+        fresh_left = self._end is None or step < self._end
+        if self._retry and (not fresh_left or fresh_since_retry > 0):
+            return self._retry.pop(0), True, step
+        if fresh_left:
+            return step, False, step + 1
+        return None, False, step
 
     def _producer(self):
         step = self._step
+        fresh_since_retry = 0
         while not self._stop.is_set():
-            import time
-            t0 = time.time()
-            batch = self.dataset.batch(step)
-            if time.time() - t0 > self.cfg.straggler_timeout_s:
-                self._skipped.append(step)   # log + retry later
-                step += 1
+            idx, is_retry, step = self._next_index(step, fresh_since_retry)
+            if idx is None:
+                return
+            if is_retry:
+                fresh_since_retry = 0
+            t0 = time.monotonic()
+            batch = self.dataset.batch(idx)
+            slow = time.monotonic() - t0 > self.cfg.straggler_timeout_s
+            if slow and not is_retry:
+                # skip: serve the next index first, re-queue this one
+                self.stragglers.append(idx)
+                self._retry.append(idx)
+                fresh_since_retry = 0
                 continue
+            if not is_retry:
+                fresh_since_retry += 1
             while not self._stop.is_set():
                 try:
-                    self._q.put((step, batch), timeout=0.5)
+                    self._q.put((idx, batch), timeout=0.5)
                     break
                 except queue.Full:
                     continue
-            step += 1
 
     def __iter__(self) -> Iterator:
         return self
@@ -131,12 +170,19 @@ class PrefetchIterator:
     def __next__(self):
         while True:
             try:
-                return self._q.get(timeout=1.0)
+                return self._q.get(timeout=0.1)
             except queue.Empty:
                 if self._stop.is_set():
-                    raise StopIteration
+                    raise StopIteration from None
+                if self._done.is_set():
+                    # the producer may have put its last batch between our
+                    # timeout and the done flag: drain before stopping
+                    try:
+                        return self._q.get_nowait()
+                    except queue.Empty:
+                        raise StopIteration from None
                 continue
 
     def close(self):
         self._stop.set()
-        self._thread.join(timeout=2.0)
+        self._done.wait(timeout=2.0)

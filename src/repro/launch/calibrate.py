@@ -1,0 +1,77 @@
+"""Calibration launcher: measure FAA costs on this host, refit the cost
+model, persist the result, and report what every layer will now use.
+
+    PYTHONPATH=src python -m repro.launch.calibrate            # full
+    PYTHONPATH=src python -m repro.launch.calibrate --fast     # quick refit
+    PYTHONPATH=src python -m repro.launch.calibrate --simulate-only
+
+Writes ``results/calibration.json`` (see ``repro.core.runtime``); every
+subsequent process auto-loads it, so the data-pipeline grain, the
+``cost_model`` scheduler, serve admission batching, and the trainer's
+microbatch count all run on coefficients fitted where the code runs
+instead of the paper's Quadro-era weights.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core import runtime
+from repro.core.atomic_sim import UnitTask
+from repro.core.topology import PLATFORMS
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller sweep + shorter refit (CI-scale)")
+    ap.add_argument("--simulate-only", action="store_true",
+                    help="skip host microbenchmarks; fit on the paper's "
+                         "three simulated platforms only")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--restarts", type=int, default=None)
+    ap.add_argument("--no-persist", action="store_true")
+    args = ap.parse_args()
+
+    meas = None
+    if not args.simulate_only:
+        meas = runtime.measure_host()
+        print(f"host: {meas.cores} cores")
+        print(f"  FAA round-trip     : {meas.faa_ns:9.1f} ns")
+        print(f"  contended transfer : {meas.transfer_ns:9.1f} ns "
+              f"({'measured' if meas.transfer_measured else 'fallback ratio'})")
+        print(f"  per-item dispatch  : {meas.dispatch_ns:9.1f} ns")
+
+    # the printed measurement IS the one the fit uses (no re-benchmark)
+    ctx = runtime.calibrate(
+        simulate_only=args.simulate_only, fast=args.fast,
+        steps=args.steps, restarts=args.restarts,
+        persist=not args.no_persist, measurement=meas)
+    print(f"calibration [{ctx.source}]: {ctx.n_points} points, "
+          f"fit loss {ctx.fit_loss:.1f}")
+    for k, v in ctx.params.items():
+        print(f"  {k:8s} {np.asarray(v).round(3)}")
+    if not args.no_persist:
+        print(f"persisted -> {runtime.calibration_path()}")
+
+    print("\nfitted block sizes vs the event model "
+          "(N=512; sim-best in brackets):")
+    task = UnitTask()
+    for topo in PLATFORMS.values():
+        t = topo.total_cores
+        row = runtime.ranking_consistency(ctx, topo, t, task)
+        feats = cm.WorkloadFeatures(
+            core_groups=topo.groups_used(t), threads=t,
+            unit_read=task.unit_read, unit_write=task.unit_write,
+            unit_comp=task.unit_comp)
+        print(f"  {topo.name:22s} T={t:3d}  "
+              f"B={ctx.suggest_block(feats, n=512):4d} "
+              f"[sim {row['sim_best_block']:4d}]  "
+              f"rank-corr {row['spearman_sim_vs_analytic']:+.2f}")
+
+
+if __name__ == "__main__":
+    main()

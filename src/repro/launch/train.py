@@ -29,12 +29,23 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=None,
+                    help="grad-accumulation count; default: the calibrated "
+                         "TuningContext picks it (autotune.microbatch_count)")
     ap.add_argument("--grad-compression", default=None)
     ap.add_argument("--ckpt-dir", default="checkpoints")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--host-threads", type=int, default=4)
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the fast online FAA-cost calibration first "
+                         "(persists results/calibration.json)")
     args = ap.parse_args()
+
+    if args.calibrate:
+        from repro.core import runtime
+        ctx = runtime.calibrate(fast=True)
+        print(f"[calibrate] {ctx.source}: {ctx.n_points} points, "
+              f"fit loss {ctx.fit_loss:.1f}")
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import parallel_for as pf
+from repro.core import runtime as rt
 from repro.models.model import Model
 from repro.serve.queue import Request, RequestQueue, as_requests
 from repro.serve.telemetry import RequestTelemetry, ServeReport
@@ -64,7 +65,10 @@ class ServeConfig:
     refill_schedule: str = "static"  # admission / refill-packing policy
     refill_threads: int = 4     # rounds mode: host threads for the packing
     mode: str = "continuous"    # "continuous" | "rounds" (legacy barrier)
-    admission_block: Optional[int] = None  # requests claimed per admission FAA
+    # requests claimed per admission FAA; None = ask the calibrated
+    # TuningContext (repro.core.runtime.tuning().admission_block — block 1
+    # for small queues, amortized batches once the queue is deep)
+    admission_block: Optional[int] = None
     # prefill widths to specialize (pad-safe families only); None = powers
     # of two from 8.  Exact lengths are used where padding is unsafe.
     prefill_buckets: Optional[Sequence[int]] = None
@@ -232,8 +236,11 @@ class Engine:
         cfg = self.cfg
         model = self.model
         self._ensure_splice()
+        block = cfg.admission_block
+        if block is None:
+            block = rt.tuning().admission_block(len(requests), cfg.slots)
         queue = RequestQueue(requests, cfg.slots, cfg.refill_schedule,
-                             block_size=cfg.admission_block)
+                             block_size=block)
         self.refill_stats = [queue.plan.stats]
         dtype = jnp.dtype(cfg.cache_dtype)
         cache = model.set_cache_lengths(
@@ -397,7 +404,7 @@ class Engine:
             self.refill_stats.append(pf.parallel_for_stats(
                 pack, len(round_reqs),
                 n_threads=max(1, min(cfg.refill_threads, len(round_reqs))),
-                schedule=cfg.refill_schedule, block_size=1))
+                schedule=cfg.refill_schedule, block_size=1, layer="serve"))
             # fresh randomness per round: otherwise temperature sampling
             # replays the identical key stream every round
             live = np.arange(cfg.slots) < len(round_reqs)

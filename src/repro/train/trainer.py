@@ -27,6 +27,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.core import runtime as rt
 from repro.data.pipeline import DataConfig, PrefetchIterator, SyntheticLM
 from repro.models.model import Model
 from repro.train import optimizer as opt_mod
@@ -40,7 +41,9 @@ class TrainerConfig:
     ckpt_dir: str = "checkpoints"
     keep_ckpts: int = 3
     log_every: int = 10
-    microbatches: int = 1
+    # None = choose via the calibrated TuningContext (the paper's block-size
+    # problem at microbatch granularity; see autotune.microbatch_count)
+    microbatches: Optional[int] = 1
     grad_compression: Optional[str] = None
     seed: int = 0
 
@@ -63,8 +66,19 @@ class Trainer:
         self.log = log_fn
         self.saver = ckpt.AsyncSaver()
         self._preempted = False
+        self.microbatches = cfg.microbatches
+        if self.microbatches is None:
+            # grads are f32 leaves shaped like params: the calibrated
+            # context turns (bytes, batch) into an accumulation count
+            grad_bytes = 4.0 * model.cfg.param_count()
+            mb = max(1, rt.tuning().microbatches(
+                data_cfg.global_batch, grad_bytes=grad_bytes))
+            while data_cfg.global_batch % mb:   # scan needs an even split
+                mb -= 1
+            self.microbatches = mb
+            self.log(f"[trainer] tuned microbatches={self.microbatches}")
         self._step_fn = jax.jit(make_train_step(
-            model, opt_cfg, microbatches=cfg.microbatches,
+            model, opt_cfg, microbatches=self.microbatches,
             grad_compression=cfg.grad_compression))
         self._shardings = shardings
 
@@ -96,22 +110,39 @@ class Trainer:
 
     # ---- loop ----
 
+    @staticmethod
+    def _in_order(data, start: int):
+        """Reorder-buffer view of the prefetch stream: straggler retries
+        arrive out of submission order, but the optimizer walk and the
+        checkpoint/restore contract ("step N committed" == all batches
+        < N applied, so a restart replays the identical sequence) need
+        in-order application.  The buffer is tiny — a skipped index lands
+        right after the fresh batch that replaced it."""
+        buf = {}
+        expect = start
+        for step_idx, batch in data:
+            buf[step_idx] = batch
+            while expect in buf:
+                yield expect, buf.pop(expect)
+                expect += 1
+
     def run(self) -> dict:
         self._install_signals()
         params, opt_state = self.init_state()
         params, opt_state, start = self._try_restore(params, opt_state)
-        data = PrefetchIterator(SyntheticLM(self.data_cfg), start_step=start)
+        data = PrefetchIterator(SyntheticLM(self.data_cfg), start_step=start,
+                                num_steps=max(0, self.cfg.total_steps - start))
         history = []
         t_last = time.time()
-        step = start
+        step = start - 1   # last step actually applied (none yet)
         try:
-            for step_idx, batch in data:
-                step = step_idx
-                if step >= self.cfg.total_steps or self._preempted:
+            for step_idx, batch in self._in_order(data, start):
+                if step_idx >= self.cfg.total_steps or self._preempted:
                     break
                 batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
                 params, opt_state, metrics = self._step_fn(
                     params, opt_state, batch)
+                step = step_idx   # only now has this step been applied
                 if (step + 1) % self.cfg.log_every == 0 or step == start:
                     dt = time.time() - t_last
                     t_last = time.time()
@@ -127,11 +158,22 @@ class Trainer:
                     ckpt.prune_old(self.cfg.ckpt_dir, self.cfg.keep_ckpts)
         finally:
             data.close()
-        # final (or preemption) save — synchronous
+        # final (or preemption) save — synchronous.  The async saver may
+        # already have committed exactly this step (total_steps a multiple
+        # of ckpt_every): re-saving would rewrite a committed checkpoint
+        # with the same payload but a new mtime — and, were the trees ever
+        # to differ mid-write, tear the checkpoint restores key on.  Skip
+        # the sync save when final_step is already committed; prune after.
+        # ``step`` is the last step actually applied (start-1 when the loop
+        # never ran), so final_step never claims an untrained batch: a
+        # preemption arriving before batch k trains resumes AT k, not past
+        # it.
         self.saver.wait()
         final_step = min(step + 1, self.cfg.total_steps)
-        ckpt.save({"params": params, "opt": opt_state},
-                  self.cfg.ckpt_dir, final_step)
+        if ckpt.latest_step(self.cfg.ckpt_dir) != final_step:
+            ckpt.save({"params": params, "opt": opt_state},
+                      self.cfg.ckpt_dir, final_step)
+        ckpt.prune_old(self.cfg.ckpt_dir, self.cfg.keep_ckpts)
         if self._preempted:
             self.log(f"[trainer] preempted at step {final_step}; "
                      "state saved for restart")

@@ -6,6 +6,11 @@ import jax
 # 512-device override lives ONLY in launch/dryrun.py (see the assignment).
 jax.config.update("jax_enable_x64", False)
 
+# Hermetic tuning: a calibration persisted by an earlier benchmark/launch
+# run must not leak into test expectations — tests that exercise the
+# calibrator build their own TuningContext explicitly.
+os.environ.setdefault("REPRO_CALIBRATION", "off")
+
 # Hypothesis profiles: CI runs derandomized (fixed seed — a red build must
 # be reproducible, not a lottery) with no deadline (shared runners stall
 # arbitrarily; a deadline flake teaches nothing).  Local runs keep fresh

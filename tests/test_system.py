@@ -3,6 +3,7 @@ preemption), data pipeline determinism + straggler path, serve engine,
 autotuner wiring, roofline parser."""
 
 import shutil
+import time
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +51,34 @@ def test_trainer_loss_decreases_and_resumes(tiny_setup):
     assert out2["history"][-1][1] <= last_loss + 0.2
 
 
+def test_trainer_skips_sync_save_when_final_step_committed(
+        tiny_setup, tmp_path, monkeypatch):
+    """The final-save race fix: when the async saver already committed a
+    checkpoint for final_step (total_steps a multiple of ckpt_every), the
+    closing synchronous save must not rewrite it."""
+    cfg, model, data_cfg, _ = tiny_setup
+    from repro.checkpoint import checkpoint as ckpt_mod
+    saved_steps = []
+    real_save = ckpt_mod.save
+
+    def counting_save(tree, directory, step):
+        saved_steps.append(step)
+        return real_save(tree, directory, step)
+
+    monkeypatch.setattr(ckpt_mod, "save", counting_save)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    tr = Trainer(model, opt, data_cfg,
+                 TrainerConfig(total_steps=4, ckpt_every=2,
+                               ckpt_dir=str(tmp_path), log_every=2,
+                               keep_ckpts=2),
+                 log_fn=lambda s: None)
+    out = tr.run()
+    assert out["final_step"] == 4
+    # async saves at 2 and 4 only — no trailing sync re-save of step 4
+    assert saved_steps == [2, 4]
+    assert ckpt_mod.latest_step(tmp_path) == 4
+
+
 def test_preemption_saves_state(tiny_setup, tmp_path):
     cfg, model, data_cfg, _ = tiny_setup
     opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
@@ -60,8 +89,23 @@ def test_preemption_saves_state(tiny_setup, tmp_path):
     tr._preempted = True  # simulate SIGTERM before the loop
     out = tr.run()
     assert out["preempted"]
+    # nothing trained: the label must not claim an untrained batch — a
+    # restart resumes AT step 0 and replays the identical sequence
+    assert out["final_step"] == 0
     from repro.checkpoint import checkpoint as ckpt
-    assert ckpt.latest_step(tmp_path) is not None
+    assert ckpt.latest_step(tmp_path) == 0
+
+
+def test_trainer_in_order_view_reorders_straggler_retries():
+    """Straggler retries reach the trainer out of order; the optimizer
+    walk (and the 'checkpoint at N == batches < N applied' contract)
+    needs the in-order view."""
+    stream = [(0, "b0"), (2, "b2"), (1, "b1"), (3, "b3")]
+    assert list(Trainer._in_order(iter(stream), 0)) == [
+        (0, "b0"), (1, "b1"), (2, "b2"), (3, "b3")]
+    # a resumed stream starts mid-sequence
+    assert list(Trainer._in_order(iter([(6, "x"), (5, "y")]), 5)) == [
+        (5, "y"), (6, "x")]
 
 
 def test_data_pipeline_deterministic():
@@ -84,6 +128,43 @@ def test_prefetch_iterator_orders_steps():
     steps = [next(it)[0] for _ in range(4)]
     it.close()
     assert steps == [3, 4, 5, 6]
+
+
+def test_prefetch_iterator_bounded_stream_stops():
+    """num_steps bounds the producer: the stream ends with StopIteration
+    instead of producing past the consumer's last step forever."""
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2,
+                     host_threads=2, prefetch=2)
+    it = PrefetchIterator(SyntheticLM(cfg), start_step=3, num_steps=4)
+    steps = [s for s, _ in it]
+    assert steps == [3, 4, 5, 6]
+    with pytest.raises(StopIteration):
+        next(it)
+    it.close()
+
+
+def test_prefetch_iterator_retries_skipped_stragglers():
+    """A straggler batch is skipped (the next index is served first) but
+    then actually retried and delivered — the re-queue the docstring
+    promises — and a bounded stream still delivers every step."""
+
+    class OneSlowStep(SyntheticLM):
+        def batch(self, step):
+            out = super().batch(step)
+            if step == 1 and 1 not in getattr(self, "_slowed", set()):
+                self._slowed = {1}
+                time.sleep(0.05)
+            return out
+
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2,
+                     host_threads=2, prefetch=4,
+                     straggler_timeout_s=0.01)
+    it = PrefetchIterator(OneSlowStep(cfg), start_step=0, num_steps=4)
+    got = [s for s, _ in it]
+    it.close()
+    assert it.stragglers == [1]          # skipped once...
+    assert sorted(got) == [0, 1, 2, 3]   # ...but delivered exactly once
+    assert got.index(1) > got.index(2)   # after the index that replaced it
 
 
 def test_serve_engine_greedy_deterministic(tiny_setup):

@@ -38,13 +38,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="sim | cost | taskflow | sched | serve | device "
-                         "| roofline | calib")
+                         "| roofline | calib | kautotune")
     ap.add_argument("--quick", action="store_true",
                     help="run each suite's QUICK subset (CI smoke)")
     args = ap.parse_args()
 
     from benchmarks import (calibration_sweep, cost_model_bench,
-                            device_knobs, dryrun_summary, scheduler_sweep,
+                            device_knobs, dryrun_summary,
+                            kernel_autotune_sweep, scheduler_sweep,
                             serve_admission_sweep, sim_tables,
                             taskflow_compare)
 
@@ -57,6 +58,7 @@ def main() -> None:
         "device": device_knobs,
         "roofline": dryrun_summary,
         "calib": calibration_sweep,
+        "kautotune": kernel_autotune_sweep,
     }
     suites = {name: (getattr(m, "QUICK", m.ALL) if args.quick else m.ALL)
               for name, m in mods.items()}

@@ -48,6 +48,31 @@ def _aligned_candidates(limit: int, align: int = MXU) -> list[int]:
     return out or [align]
 
 
+def fit_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (always >= 1).
+
+    The replacement for the old ``while n % b: b //= 2`` halving loop,
+    which collapses far below the tuned block for non-power-of-two
+    extents (e.g. n=96 with a tuned 128 halves down to 32 and n=100 all
+    the way to 4, skipping the perfectly feasible 96 and 25).  Picking
+    the largest feasible *divisor* keeps the realized block as close to
+    the tuned choice as the grid constraint allows.
+    """
+    n = max(1, int(n))
+    t = max(1, min(int(target), n))
+    best = 1
+    i = 1
+    while i * i <= n:
+        if n % i == 0:
+            if i <= t:
+                best = max(best, i)
+            j = n // i
+            if j <= t:
+                best = max(best, j)
+        i += 1
+    return best
+
+
 def choose_block(
     n: int,
     workers: int,
@@ -92,6 +117,57 @@ class AttentionBlocks:
     vmem_bytes: int
 
 
+def attention_block_candidates(
+    seq_q: int,
+    seq_k: int,
+    head_dim: int,
+    *,
+    dtype_bytes: int = 2,
+    topo: TpuTopology = V5E_POD,
+    vmem_budget: int = VMEM_BUDGET,
+    overhead: Optional[float] = None,
+    align: int = MXU,
+) -> list[AttentionBlocks]:
+    """VMEM-feasible (block_q, block_k) candidates ranked by the analytic
+    cost, best first — the prior-generation layer for the measured search
+    (:mod:`repro.core.autotune_search`).
+
+    Per grid step (one q block × full K loop) the working set is
+    q[bq,dh] + k[bk,dh] + v[bk,dh] + scores[bq,bk] + o[bq,dh] + stats.
+    Candidates are MXU-aligned; ranking uses the analytic cost with
+    N = (Sq/bq)·(Sk/bk) inner steps and L = dispatch overhead, plus a
+    mild preference for larger arithmetic intensity (bigger bk amortizes
+    the q-block load, bigger bq amortizes the kv streaming).
+
+    ``overhead`` overrides the topology's per-grid-step dispatch cost L
+    (the measured search passes the calibrated ``TuningContext`` value);
+    ``align`` relaxes the MXU alignment for backends without a systolic
+    array (CPU interpret mode).
+    """
+    overhead_s = topo.chunk_overhead_s if overhead is None else overhead
+    scored = []
+    per_step_flops = lambda bq, bk: 4.0 * bq * bk * head_dim  # qk^T + pv
+    for bq in _aligned_candidates(min(seq_q, 1024), align):
+        for bk in _aligned_candidates(min(seq_k, 2048), align):
+            vmem = dtype_bytes * (
+                bq * head_dim + 2 * bk * head_dim + bq * head_dim
+            ) + 4 * (bq * bk + 2 * bq)  # f32 scores + m/l stats
+            if vmem > vmem_budget:
+                continue
+            steps = max(1, seq_q // bq) * max(1, seq_k // bk)
+            t_step = per_step_flops(bq, bk) / topo.peak_flops
+            # memory per step: stream k,v once per q block
+            m_step = dtype_bytes * 2 * bk * head_dim / topo.hbm_bw
+            cost = cm.analytic_cost(
+                steps, 1.0, overhead_s, max(t_step, m_step), 1,
+                quota=0.0,
+            )
+            scored.append((cost, AttentionBlocks(bq, bk, vmem)))
+    assert scored
+    scored.sort(key=lambda s: s[0])
+    return [blocks for _, blocks in scored]
+
+
 def attention_block_sizes(
     seq_q: int,
     seq_k: int,
@@ -101,40 +177,13 @@ def attention_block_sizes(
     topo: TpuTopology = V5E_POD,
     vmem_budget: int = VMEM_BUDGET,
 ) -> AttentionBlocks:
-    """Pick (block_q, block_k) for the flash-attention kernel.
-
-    Per grid step (one q block × full K loop) the working set is
-    q[bq,dh] + k[bk,dh] + v[bk,dh] + scores[bq,bk] + o[bq,dh] + stats.
-    Candidates are MXU-aligned; ranking uses the analytic cost with
-    N = (Sq/bq)·(Sk/bk) inner steps and L = dispatch overhead, plus a
-    mild preference for larger arithmetic intensity (bigger bk amortizes
-    the q-block load, bigger bq amortizes the kv streaming).
-    """
-    best = None
-    per_step_flops = lambda bq, bk: 4.0 * bq * bk * head_dim  # qk^T + pv
-    for bq in _aligned_candidates(min(seq_q, 1024)):
-        for bk in _aligned_candidates(min(seq_k, 2048)):
-            vmem = dtype_bytes * (
-                bq * head_dim + 2 * bk * head_dim + bq * head_dim
-            ) + 4 * (bq * bk + 2 * bq)  # f32 scores + m/l stats
-            if vmem > vmem_budget:
-                continue
-            steps = (seq_q // bq) * max(1, seq_k // bk)
-            t_step = per_step_flops(bq, bk) / topo.peak_flops
-            # memory per step: stream k,v once per q block
-            m_step = dtype_bytes * 2 * bk * head_dim / topo.hbm_bw
-            cost = cm.analytic_cost(
-                steps, 1.0, topo.chunk_overhead_s, max(t_step, m_step), 1,
-                quota=0.0,
-            )
-            if best is None or cost < best[0]:
-                best = (cost, bq, bk, vmem)
-    assert best is not None
-    _, bq, bk, vmem = best
-    return AttentionBlocks(block_q=bq, block_k=bk, vmem_bytes=vmem)
+    """The analytic pick: best-ranked flash-attention candidate."""
+    return attention_block_candidates(
+        seq_q, seq_k, head_dim, dtype_bytes=dtype_bytes, topo=topo,
+        vmem_budget=vmem_budget)[0]
 
 
-def decode_split_k(
+def decode_split_candidates(
     seq_len: int,
     *,
     lanes: int = 8,           # parallel units available to one decode head
@@ -142,20 +191,70 @@ def decode_split_k(
     topo: TpuTopology = V5E_POD,
     head_dim: int = 128,
     dtype_bytes: int = 2,
-) -> int:
-    """flash-decode split count — the cleanest ParallelFor dual on device.
+    min_rows_per_split: int = 128,
+) -> list[int]:
+    """Split counts ranked by the analytic cost, best first.
 
     N = seq_len KV rows, ``B = seq_len/splits`` rows per split; each split
     pays a combine cost (partial-softmax merge) = the FAA-analogue L.
+    ``min_rows_per_split`` bounds how fine a split may shred the KV
+    stream (relaxed by the measured search on small shapes).
     """
     bytes_per_row = 2 * head_dim * dtype_bytes
     t_row = bytes_per_row / topo.hbm_bw
-    candidates = [s for s in (1, 2, 4, 8, 16, 32, 64) if s <= max(1, seq_len // 128)]
-    costs = [
-        combine_overhead * s + (seq_len * t_row) / min(s, lanes)
+    cap = max(1, seq_len // max(1, min_rows_per_split))  # always admits 1
+    candidates = [s for s in (1, 2, 4, 8, 16, 32, 64) if s <= cap]
+    scored = sorted(
+        (combine_overhead * s + (seq_len * t_row) / min(s, lanes), s)
         for s in candidates
-    ]
-    return int(candidates[int(np.argmin(costs))])
+    )
+    return [s for _, s in scored]
+
+
+def decode_split_k(
+    seq_len: int,
+    *,
+    lanes: int = 8,
+    combine_overhead: float = 0.8e-6,
+    topo: TpuTopology = V5E_POD,
+    head_dim: int = 128,
+    dtype_bytes: int = 2,
+) -> int:
+    """The analytic pick: best-ranked flash-decode split count."""
+    return decode_split_candidates(
+        seq_len, lanes=lanes, combine_overhead=combine_overhead, topo=topo,
+        head_dim=head_dim, dtype_bytes=dtype_bytes)[0]
+
+
+def ssd_chunk_candidates(
+    seq_len: int,
+    headdim: int = 64,
+    d_state: int = 128,
+    *,
+    dtype_bytes: int = 2,
+    vmem_budget: int = VMEM_BUDGET,
+    options: Sequence[int] = (64, 128, 256, 512),
+) -> list[int]:
+    """Mamba2 SSD chunk lengths ranked by the analytic cost, best first:
+    intra-chunk cost ~ O(c²·h) per chunk with N/c chunks, inter-chunk scan
+    pays a per-chunk step cost — same tradeoff.  128 keeps the intra-chunk
+    matmuls MXU-shaped; the measured search widens ``options`` downward on
+    CPU where the MXU constraint is moot."""
+    scored = []
+    for c in options:
+        if c > seq_len:
+            continue
+        vmem = dtype_bytes * c * (headdim + 2 * d_state) * 8
+        if vmem > vmem_budget:
+            continue
+        n_chunks = max(1, seq_len // c)
+        intra = n_chunks * c * c * headdim          # quadratic-in-chunk work
+        inter = n_chunks * (headdim * d_state * 40)  # scan step overhead
+        scored.append((intra + inter, c))
+    if not scored:
+        return [min(128, max(1, seq_len))]
+    scored.sort()
+    return [c for _, c in scored]
 
 
 def ssd_chunk_size(
@@ -166,22 +265,57 @@ def ssd_chunk_size(
     dtype_bytes: int = 2,
     vmem_budget: int = VMEM_BUDGET,
 ) -> int:
-    """Mamba2 SSD chunk length: intra-chunk cost ~ O(c²·h) per chunk with
-    N/c chunks, inter-chunk scan pays a per-chunk step cost — same tradeoff.
-    128 keeps the intra-chunk matmuls MXU-shaped."""
-    best, best_cost = 128, np.inf
-    for c in (64, 128, 256, 512):
-        if c > seq_len:
-            break
-        vmem = dtype_bytes * c * (headdim + 2 * d_state) * 8
-        if vmem > vmem_budget:
-            continue
-        n_chunks = max(1, seq_len // c)
-        intra = n_chunks * c * c * headdim          # quadratic-in-chunk work
-        inter = n_chunks * (headdim * d_state * 40)  # scan step overhead
-        if intra + inter < best_cost:
-            best, best_cost = c, intra + inter
-    return best
+    """The analytic pick: best-ranked SSD chunk length."""
+    return ssd_chunk_candidates(
+        seq_len, headdim, d_state, dtype_bytes=dtype_bytes,
+        vmem_budget=vmem_budget)[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class GmmTiles:
+    block_c: int
+    block_f: int
+    block_d: int
+
+
+def gmm_tile_candidates(
+    c: int,
+    d: int,
+    f: int,
+    *,
+    dtype_bytes: int = 2,
+    topo: TpuTopology = V5E_POD,
+    vmem_budget: Optional[int] = None,
+    overhead: Optional[float] = None,
+    options: Sequence[int] = (128, 256, 512),
+) -> list[GmmTiles]:
+    """VMEM-feasible grouped-matmul tiles ranked by the analytic cost,
+    best first (previously inlined in ``kernels/moe_gmm/ops.py``).  Each
+    grid step pays the dispatch overhead L; oversized tiles overflow the
+    f32 accumulator's VMEM share."""
+    budget = VMEM_BUDGET // 2 if vmem_budget is None else vmem_budget
+    overhead_s = topo.chunk_overhead_s if overhead is None else overhead
+    scored = []
+    for bc in options:
+        for bf in options:
+            for bd in options:
+                vmem = dtype_bytes * (bc * bd + bd * bf) + 4 * bc * bf
+                if vmem > budget:
+                    continue
+                steps = max(1, (c // bc) * (f // bf) * (d // bd))
+                t_step = 2 * bc * bf * bd / topo.peak_flops
+                scored.append((steps * (t_step + overhead_s),
+                               GmmTiles(bc, bf, bd)))
+    if not scored:
+        base = min(options)
+        return [GmmTiles(base, base, base)]
+    scored.sort(key=lambda s: s[0])
+    return [tiles for _, tiles in scored]
+
+
+def gmm_tiles(c: int, d: int, f: int, *, dtype_bytes: int = 2) -> GmmTiles:
+    """The analytic pick: best-ranked grouped-matmul tile triple."""
+    return gmm_tile_candidates(c, d, f, dtype_bytes=dtype_bytes)[0]
 
 
 def microbatch_count(

@@ -1,0 +1,371 @@
+"""KernelSpecs: how each of the four Pallas kernels plugs into the search.
+
+A spec answers four questions:
+
+* **bucket** — which shapes share one tuning-db entry.  Sequence-like
+  extents round up to the next power of two (a serve engine sees every
+  prefill length; tuning each one would never go warm), head/state dims
+  and dtype stay exact because they change the kernel's inner shape.
+* **candidates** — the model-pruned search space: the ranked candidate
+  lists from :mod:`repro.core.autotune` (the prior-generation layer),
+  seeded with the calibrated ``TuningContext``'s measured dispatch
+  overhead as L and relaxed below MXU alignment on CPU, where interpret
+  mode has no systolic array to please.
+* **runner** — a jitted thunk executing the kernel once on synthetic
+  inputs at the bucket shape, compiled per candidate during warmup so the
+  timed reps measure steady-state execution, exactly what a serving
+  process will replay.
+* **analytic** — the classic closed-form fallback (cache miss,
+  ``REPRO_TUNING=off``): the plain ``autotune`` helpers with their
+  topology-constant defaults, hermetic and identical to the pre-search
+  ops.
+
+The runner factories import the kernel modules lazily: the search package
+is imported by every ``ops.py``, and eagerly pulling all four kernels in
+would turn a single-kernel import into a whole-subsystem import.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+
+__all__ = ["KernelSpec", "QUICK_SHAPES", "REPRESENTATIVE_SHAPES", "SPECS",
+           "backend_name", "fmt_items"]
+
+
+def backend_name() -> str:
+    return jax.default_backend()
+
+
+def _on_tpu() -> bool:
+    return backend_name() == "tpu"
+
+
+def _overhead_s() -> float:
+    """Per-grid-step dispatch overhead prior: the calibrated host
+    measurement off-TPU (interpret mode dispatches from python, so the
+    measured per-item dispatch cost IS the right L), the topology constant
+    on TPU."""
+    if _on_tpu():
+        return autotune.V5E_POD.chunk_overhead_s
+    from repro.core import runtime  # lazy: runtime consults cost_model
+
+    return max(1e-6, runtime.tuning().dispatch_overhead_s)
+
+
+def _pow2_bucket(x: int, floor: int = 8) -> int:
+    b = floor
+    while b < x:
+        b *= 2
+    return b
+
+
+def fmt_items(d: dict) -> str:
+    """Canonical one-cell serialization of a shape bucket or config:
+    ";"-separated sorted k=v pairs (a "," would split a CSV cell).  Used
+    for db bucket keys and benchmark-table config columns — one
+    implementation so the two can never silently diverge."""
+    return ";".join(f"{k}={v}" for k, v in sorted(d.items()))
+
+
+def _dedupe(configs: list[dict]) -> list[dict]:
+    seen, out = set(), []
+    for cfg in configs:
+        sig = tuple(sorted(cfg.items()))
+        if sig not in seen:
+            seen.add(sig)
+            out.append(cfg)
+    return out
+
+
+def _with_classic(cands: list[dict], classic: dict) -> list[dict]:
+    """Prior's pick stays first, but the classic closed-form fallback is
+    guaranteed a slot no later than second — so every search measures the
+    config a cache miss would actually run, and the recorded winner can
+    never be slower than the production fallback."""
+    if not cands:
+        return [classic]
+    if cands[0] == classic:
+        return cands
+    return [cands[0], classic] + [c for c in cands[1:] if c != classic]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    name: str
+    bucket: Callable[..., dict]             # shape kwargs -> bucket shape
+    candidates: Callable[[dict], list[dict]]  # ranked, analytic pick first
+    runner_factory: Callable[[dict], Callable[[dict], Callable[[], None]]]
+    analytic: Callable[[dict], dict]        # classic closed-form fallback
+
+    def bucket_key(self, shape: dict) -> str:
+        return fmt_items(shape)
+
+    def analytic_config(self, **shape) -> dict:
+        """The closed-form pick for the *actual* shape — the fallback used
+        on cache miss and under ``REPRO_TUNING=off``.  Deliberately NOT
+        the search prior (`candidates`): the fallback calls the classic
+        ``autotune`` helpers with their topology-constant defaults, so it
+        matches the pre-search ops exactly and stays hermetic — no
+        ``runtime.tuning()`` (and hence no ``calibration.json``)
+        dependency in off mode."""
+        return self.analytic(dict(shape))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: (block_q, block_k)
+# ---------------------------------------------------------------------------
+
+def _flash_bucket(*, sq: int, skv: int, d: int, dtype: str = "float32",
+                  causal: bool = True) -> dict:
+    return {"sq": _pow2_bucket(sq), "skv": _pow2_bucket(skv),
+            "d": int(d), "dtype": str(dtype), "causal": int(bool(causal))}
+
+
+def _dtype_bytes(shape: dict) -> int:
+    return max(1, jnp.dtype(shape.get("dtype", "float32")).itemsize)
+
+
+def _flash_candidates(shape: dict) -> list[dict]:
+    align = 128 if _on_tpu() else 8
+    blocks = autotune.attention_block_candidates(
+        shape["sq"], shape["skv"], shape["d"],
+        dtype_bytes=_dtype_bytes(shape), overhead=_overhead_s(),
+        align=align)
+    classic = _flash_analytic(shape)
+    return _with_classic(
+        _dedupe([
+            {"block_q": autotune.fit_block(shape["sq"], b.block_q),
+             "block_k": autotune.fit_block(shape["skv"], b.block_k)}
+            for b in blocks
+        ]),
+        {"block_q": autotune.fit_block(shape["sq"], classic["block_q"]),
+         "block_k": autotune.fit_block(shape["skv"], classic["block_k"])})
+
+
+def _flash_analytic(shape: dict) -> dict:
+    blocks = autotune.attention_block_sizes(
+        shape["sq"], shape["skv"], shape["d"])
+    return {"block_q": blocks.block_q, "block_k": blocks.block_k}
+
+
+def _flash_runner_factory(shape: dict):
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+    dtype = jnp.dtype(shape["dtype"])
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, shape["sq"], 1, shape["d"]), dtype)
+    k = jax.random.normal(ks[1], (1, shape["skv"], 1, shape["d"]), dtype)
+    v = jax.random.normal(ks[2], (1, shape["skv"], 1, shape["d"]), dtype)
+    interpret = not _on_tpu()
+
+    def make(config: dict) -> Callable[[], None]:
+        fn = jax.jit(functools.partial(
+            flash_attention_fwd, causal=bool(shape["causal"]),
+            block_q=config["block_q"], block_k=config["block_k"],
+            interpret=interpret))
+
+        def run() -> None:
+            jax.block_until_ready(fn(q, k, v))
+
+        return run
+
+    return make
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: num_splits
+# ---------------------------------------------------------------------------
+
+def _decode_bucket(*, s: int, d: int, dtype: str = "float32") -> dict:
+    return {"s": _pow2_bucket(s), "d": int(d), "dtype": str(dtype)}
+
+
+def _decode_candidates(shape: dict) -> list[dict]:
+    min_rows = 128 if _on_tpu() else 16
+    splits = autotune.decode_split_candidates(
+        shape["s"], head_dim=shape["d"], dtype_bytes=_dtype_bytes(shape),
+        combine_overhead=_overhead_s(), min_rows_per_split=min_rows)
+    classic = _decode_analytic(shape)
+    return _with_classic(
+        _dedupe([{"num_splits": autotune.fit_block(shape["s"], ns)}
+                 for ns in splits]),
+        {"num_splits": autotune.fit_block(shape["s"],
+                                          classic["num_splits"])})
+
+
+def _decode_analytic(shape: dict) -> dict:
+    return {"num_splits": autotune.decode_split_k(
+        shape["s"], head_dim=shape["d"])}
+
+
+def _decode_runner_factory(shape: dict):
+    from repro.kernels.decode_attention.kernel import decode_attention_fwd
+
+    dtype = jnp.dtype(shape["dtype"])
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 1, shape["d"]), dtype)
+    k = jax.random.normal(ks[1], (1, shape["s"], 1, shape["d"]), dtype)
+    v = jax.random.normal(ks[2], (1, shape["s"], 1, shape["d"]), dtype)
+    kv_len = jnp.full((1,), shape["s"], jnp.int32)
+    interpret = not _on_tpu()
+
+    def make(config: dict) -> Callable[[], None]:
+        fn = jax.jit(functools.partial(
+            decode_attention_fwd, num_splits=config["num_splits"],
+            interpret=interpret))
+
+        def run() -> None:
+            jax.block_until_ready(fn(q, k, v, kv_len))
+
+        return run
+
+    return make
+
+
+# ---------------------------------------------------------------------------
+# moe_gmm: (block_c, block_f, block_d)
+# ---------------------------------------------------------------------------
+
+def _gmm_bucket(*, c: int, d: int, f: int, dtype: str = "float32") -> dict:
+    return {"c": _pow2_bucket(c), "d": _pow2_bucket(d),
+            "f": _pow2_bucket(f), "dtype": str(dtype)}
+
+
+def _gmm_candidates(shape: dict) -> list[dict]:
+    options = ((128, 256, 512) if _on_tpu()
+               else (32, 64, 128, 256, 512))
+    tiles = autotune.gmm_tile_candidates(
+        shape["c"], shape["d"], shape["f"],
+        dtype_bytes=_dtype_bytes(shape), overhead=_overhead_s(),
+        options=options)
+    classic = _gmm_analytic(shape)
+    fit = lambda t: {
+        "block_c": autotune.fit_block(shape["c"], t["block_c"]),
+        "block_f": autotune.fit_block(shape["f"], t["block_f"]),
+        "block_d": autotune.fit_block(shape["d"], t["block_d"])}
+    return _with_classic(
+        _dedupe([fit({"block_c": t.block_c, "block_f": t.block_f,
+                      "block_d": t.block_d}) for t in tiles]),
+        fit(classic))
+
+
+def _gmm_analytic(shape: dict) -> dict:
+    tiles = autotune.gmm_tiles(shape["c"], shape["d"], shape["f"])
+    return {"block_c": tiles.block_c, "block_f": tiles.block_f,
+            "block_d": tiles.block_d}
+
+
+def _gmm_runner_factory(shape: dict):
+    from repro.kernels.moe_gmm.kernel import gmm
+
+    dtype = jnp.dtype(shape["dtype"])
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    x = jax.random.normal(ks[0], (1, shape["c"], shape["d"]), dtype)
+    w = jax.random.normal(ks[1], (1, shape["d"], shape["f"]), dtype)
+    interpret = not _on_tpu()
+
+    def make(config: dict) -> Callable[[], None]:
+        fn = jax.jit(functools.partial(
+            gmm, block_c=config["block_c"], block_f=config["block_f"],
+            block_d=config["block_d"], interpret=interpret))
+
+        def run() -> None:
+            jax.block_until_ready(fn(x, w))
+
+        return run
+
+    return make
+
+
+# ---------------------------------------------------------------------------
+# mamba_ssd: chunk
+# ---------------------------------------------------------------------------
+
+def _ssd_bucket(*, s: int, p: int, n: int, dtype: str = "float32") -> dict:
+    return {"s": _pow2_bucket(s, floor=16), "p": int(p), "n": int(n),
+            "dtype": str(dtype)}
+
+
+def _ssd_candidates(shape: dict) -> list[dict]:
+    options = ((64, 128, 256, 512) if _on_tpu()
+               else (16, 32, 64, 128, 256, 512))
+    chunks = autotune.ssd_chunk_candidates(
+        shape["s"], shape["p"], shape["n"],
+        dtype_bytes=_dtype_bytes(shape), options=options)
+    classic = _ssd_analytic(shape)
+    return _with_classic(
+        _dedupe([{"chunk": autotune.fit_block(shape["s"], c)}
+                 for c in chunks]),
+        {"chunk": autotune.fit_block(shape["s"], classic["chunk"])})
+
+
+def _ssd_analytic(shape: dict) -> dict:
+    return {"chunk": autotune.ssd_chunk_size(
+        shape["s"], headdim=shape["p"], d_state=shape["n"])}
+
+
+def _ssd_runner_factory(shape: dict):
+    from repro.kernels.mamba_ssd.kernel import ssd_fwd
+
+    dtype = jnp.dtype(shape["dtype"])
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (1, shape["s"], 1, shape["p"]), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, shape["s"], 1)))
+    a = -jnp.exp(jax.random.normal(ks[2], (1,)))
+    b_in = jax.random.normal(ks[3], (1, shape["s"], 1, shape["n"]), dtype)
+    c_in = jax.random.normal(ks[4], (1, shape["s"], 1, shape["n"]), dtype)
+    interpret = not _on_tpu()
+
+    def make(config: dict) -> Callable[[], None]:
+        fn = jax.jit(functools.partial(
+            ssd_fwd, chunk=config["chunk"], interpret=interpret))
+
+        def run() -> None:
+            jax.block_until_ready(fn(x, dt, a, b_in, c_in))
+
+        return run
+
+    return make
+
+
+# ---------------------------------------------------------------------------
+# registry + CLI/benchmark shape sets
+# ---------------------------------------------------------------------------
+
+SPECS: dict[str, KernelSpec] = {
+    "flash_attention": KernelSpec(
+        "flash_attention", _flash_bucket, _flash_candidates,
+        _flash_runner_factory, _flash_analytic),
+    "decode_attention": KernelSpec(
+        "decode_attention", _decode_bucket, _decode_candidates,
+        _decode_runner_factory, _decode_analytic),
+    "moe_gmm": KernelSpec(
+        "moe_gmm", _gmm_bucket, _gmm_candidates, _gmm_runner_factory,
+        _gmm_analytic),
+    "mamba_ssd": KernelSpec(
+        "mamba_ssd", _ssd_bucket, _ssd_candidates, _ssd_runner_factory,
+        _ssd_analytic),
+}
+
+# CPU-interpret-sized sweeps; on TPU pass larger shapes via the tune CLI.
+REPRESENTATIVE_SHAPES: dict[str, list[dict]] = {
+    "flash_attention": [dict(sq=256, skv=256, d=32)],
+    "decode_attention": [dict(s=512, d=32)],
+    "moe_gmm": [dict(c=128, d=128, f=128)],
+    "mamba_ssd": [dict(s=256, p=32, n=32)],
+}
+
+QUICK_SHAPES: dict[str, list[dict]] = {
+    "flash_attention": [dict(sq=64, skv=64, d=16)],
+    "decode_attention": [dict(s=128, d=16)],
+    "moe_gmm": [dict(c=64, d=64, f=64)],
+    "mamba_ssd": [dict(s=64, p=16, n=16)],
+}

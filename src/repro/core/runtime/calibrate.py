@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import atomic_sim, cost_model as cm
 from repro.core.atomic_sim import UnitTask
+from repro.core.runtime.artifacts import load_artifact, save_artifact
 from repro.core.schedulers.base import AtomicCounter
 from repro.core.topology import (AMD3970X, GOLD5225R, W3225R, CoreGroup,
                                  CpuTopology)
@@ -450,21 +451,33 @@ def run_calibration(
 # Persistence
 # ---------------------------------------------------------------------------
 
+# calibration.json and the kernel tuning db share the versioned-artifact
+# envelope (repro.core.runtime.artifacts): a reader only trusts an exact
+# (kind, version) match and falls back to the analytic default otherwise.
+CALIBRATION_KIND = "calibration"
+CALIBRATION_VERSION = 1
+
+
 def save_calibration(ctx: TuningContext, path: os.PathLike | str) -> Path:
-    p = Path(path)
-    p.parent.mkdir(parents=True, exist_ok=True)
-    tmp = p.with_suffix(p.suffix + ".tmp")
-    tmp.write_text(json.dumps(ctx.as_json_dict(), indent=2))
-    tmp.replace(p)
-    return p
+    return save_artifact(path, kind=CALIBRATION_KIND,
+                         version=CALIBRATION_VERSION,
+                         payload=ctx.as_json_dict())
 
 
 def load_calibration(path: os.PathLike | str) -> Optional[TuningContext]:
-    p = Path(path)
-    if not p.exists():
-        return None
+    payload = load_artifact(path, kind=CALIBRATION_KIND,
+                            version=CALIBRATION_VERSION)
+    if payload is None:
+        # pre-envelope calibrations were the bare payload dict
+        p = Path(path)
+        if not p.exists():
+            return None
+        try:
+            payload = json.loads(p.read_text())
+        except (ValueError, OSError):
+            return None
     try:
-        return TuningContext.from_json_dict(json.loads(p.read_text()))
+        return TuningContext.from_json_dict(payload)
     except (ValueError, KeyError, TypeError):
         return None  # torn/stale file: fall back to the default context
 

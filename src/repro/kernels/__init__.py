@@ -3,5 +3,8 @@
 Each kernel package: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
 ops.py (jit'd public wrapper with autotuned block sizes), ref.py (pure-jnp
 oracle).  Block/tile/split sizes are the paper's ParallelFor block size,
-chosen by repro.core.autotune.  Validated on CPU with interpret=True.
+resolved through repro.core.autotune_search.lookup_or_search — the
+measured winner from results/tuning_db.json when the bucket is warm, the
+analytic prior from repro.core.autotune otherwise.  Validated on CPU with
+interpret=True.
 """

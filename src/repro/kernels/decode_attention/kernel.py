@@ -26,7 +26,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import compat
+from repro.core import autotune, compat
 
 NEG_INF = -1e30
 
@@ -72,10 +72,9 @@ def decode_attention_fwd(
     b, hq, d = q.shape
     s, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
-    ns = num_splits
-    while s % ns:
-        ns //= 2
-    ns = max(1, ns)
+    # largest divisor of S <= the tuned split count (halving collapsed to
+    # 1 split on non-power-of-two cache lengths)
+    ns = autotune.fit_block(s, num_splits)
     ss = s // ns
 
     qt = q.reshape(b, hkv, g, d)

@@ -1,17 +1,20 @@
-"""Public flash-decode op with cost-model-chosen split count."""
+"""Public flash-decode op: split count resolved through the measured
+tuning db (repro.core.autotune_search), analytic cost-model fallback."""
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 
-from repro.core import autotune
+from repro.core import autotune_search
 from repro.kernels.decode_attention.kernel import decode_attention_fwd
 
 
-@functools.partial(jax.jit, static_argnames=("num_splits", "interpret"))
+_decode_jit = jax.jit(decode_attention_fwd,
+                      static_argnames=("num_splits", "interpret"))
+
+
 def decode_attention(
     q: jax.Array,        # [B, Hq, D]
     k: jax.Array,        # [B, S, Hkv, D]
@@ -21,11 +24,14 @@ def decode_attention(
     num_splits: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
+    # not jitted: the db lookup must run per call (see flash_attention)
     s = k.shape[1]
     d = q.shape[-1]
     if num_splits is None:
-        num_splits = autotune.decode_split_k(s, head_dim=d)
+        cfg = autotune_search.lookup_or_search(
+            "decode_attention", s=s, d=d, dtype=q.dtype.name)
+        num_splits = cfg["num_splits"]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    return decode_attention_fwd(q, k, v, kv_len, num_splits=num_splits,
-                                interpret=interpret)
+    return _decode_jit(q, k, v, kv_len, num_splits=num_splits,
+                       interpret=interpret)

@@ -2,8 +2,10 @@
 kernels), CPU interpret fallback.
 
 On CPU (this container) the kernels run in interpret mode for validation;
-on TPU they compile to Mosaic.  Block sizes default to the cost-model
-autotuner's choice (repro.core.autotune).
+on TPU they compile to Mosaic.  Block sizes resolve through
+repro.core.autotune_search.lookup_or_search: the measured winner when the
+tuning db knows this (backend, shape-bucket), the cost model's analytic
+pick otherwise.
 """
 
 from __future__ import annotations
@@ -13,7 +15,7 @@ from typing import Optional
 
 import jax
 
-from repro.core import autotune
+from repro.core import autotune, autotune_search
 from repro.kernels.flash_attention.kernel import (flash_attention_bwd,
                                                   flash_attention_fwd)
 
@@ -22,16 +24,16 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _resolve_blocks(sq, skv, d, block_q, block_k):
+def _resolve_blocks(sq, skv, d, block_q, block_k, dtype, causal):
     if block_q is None or block_k is None:
-        blocks = autotune.attention_block_sizes(sq, skv, d)
-        block_q = block_q or max(8, min(blocks.block_q, sq))
-        block_k = block_k or max(8, min(blocks.block_k, skv))
-    while sq % block_q:
-        block_q //= 2
-    while skv % block_k:
-        block_k //= 2
-    return max(block_q, 1), max(block_k, 1)
+        cfg = autotune_search.lookup_or_search(
+            "flash_attention", sq=sq, skv=skv, d=d, dtype=dtype,
+            causal=causal)
+        block_q = block_q or max(8, min(cfg["block_q"], sq))
+        block_k = block_k or max(8, min(cfg["block_k"], skv))
+    # largest feasible divisor <= the tuned block (the old power-of-two
+    # halving collapsed to degenerate widths on non-power-of-two lengths)
+    return autotune.fit_block(sq, block_q), autotune.fit_block(skv, block_k)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
@@ -57,9 +59,9 @@ def _flash_bwd(causal, block_q, block_k, interpret, res, do):
 
 _flash.defvjp(_flash_fwd, _flash_bwd)
 
+_flash_jit = jax.jit(_flash, static_argnums=(3, 4, 5, 6))
 
-@functools.partial(
-    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+
 def flash_attention(
     q: jax.Array,
     k: jax.Array,
@@ -71,10 +73,18 @@ def flash_attention(
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """q [B,Sq,Hq,D], k/v [B,Skv,Hkv,D] -> [B,Sq,Hq,D]. Differentiable
-    (flash backward kernels with recompute)."""
+    (flash backward kernels with recompute).
+
+    Deliberately NOT jitted: the tuning-db lookup must run per call, not
+    be baked into a jit cache keyed only by shape — a db warmed after the
+    first call (or a REPRO_TUNING flip) takes effect on the next call.
+    The resolved blocks are static args of the inner jit, so same-config
+    calls still hit one compiled executable.
+    """
     b, sq, hq, d = q.shape
     skv = k.shape[1]
-    block_q, block_k = _resolve_blocks(sq, skv, d, block_q, block_k)
+    block_q, block_k = _resolve_blocks(sq, skv, d, block_q, block_k,
+                                       q.dtype.name, causal)
     if interpret is None:
         interpret = not _on_tpu()
-    return _flash(q, k, v, causal, block_q, block_k, interpret)
+    return _flash_jit(q, k, v, causal, block_q, block_k, interpret)

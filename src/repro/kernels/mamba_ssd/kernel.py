@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import compat
+from repro.core import autotune, compat
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
@@ -82,9 +82,9 @@ def ssd_fwd(
     """Returns (y [B,S,H,P], final_state [B,H,P,N])."""
     bsz, s, h, p = x.shape
     g, n = b_in.shape[2], b_in.shape[3]
-    q = min(chunk, s)
-    while s % q:
-        q //= 2
+    # largest divisor of S <= the tuned chunk (halving collapsed to tiny
+    # chunks on non-power-of-two sequence lengths)
+    q = autotune.fit_block(s, chunk)
     nc = s // q
 
     xt = x.transpose(0, 2, 1, 3)                       # [B, H, S, P]

@@ -1,17 +1,18 @@
-"""Public SSD op with cost-model-chosen chunk length."""
+"""Public SSD op: chunk length resolved through the measured tuning db
+(repro.core.autotune_search), analytic cost-model fallback."""
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 
-from repro.core import autotune
+from repro.core import autotune_search
 from repro.kernels.mamba_ssd.kernel import ssd_fwd
 
+_ssd_jit = jax.jit(ssd_fwd, static_argnames=("chunk", "interpret"))
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+
 def ssd(
     x: jax.Array,      # [B, S, H, P]
     dt: jax.Array,     # [B, S, H]
@@ -22,9 +23,12 @@ def ssd(
     chunk: Optional[int] = None,
     interpret: Optional[bool] = None,
 ):
+    # not jitted: the db lookup must run per call (see flash_attention)
     if chunk is None:
-        chunk = autotune.ssd_chunk_size(
-            x.shape[1], headdim=x.shape[-1], d_state=b_in.shape[-1])
+        cfg = autotune_search.lookup_or_search(
+            "mamba_ssd", s=x.shape[1], p=x.shape[-1], n=b_in.shape[-1],
+            dtype=x.dtype.name)
+        chunk = cfg["chunk"]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    return ssd_fwd(x, dt, a, b_in, c_in, chunk=chunk, interpret=interpret)
+    return _ssd_jit(x, dt, a, b_in, c_in, chunk=chunk, interpret=interpret)

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import compat
+from repro.core import autotune, compat
 
 
 def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nd: int):
@@ -49,13 +49,11 @@ def gmm(
 ) -> jax.Array:
     e, c, d = x.shape
     f = w.shape[2]
-    bc, bf, bd = min(block_c, c), min(block_f, f), min(block_d, d)
-    while c % bc:
-        bc //= 2
-    while f % bf:
-        bf //= 2
-    while d % bd:
-        bd //= 2
+    # largest divisors <= the tuned tiles (halving collapsed to degenerate
+    # 1-wide tiles on non-power-of-two extents)
+    bc = autotune.fit_block(c, block_c)
+    bf = autotune.fit_block(f, block_f)
+    bd = autotune.fit_block(d, block_d)
     nc, nf, nd = c // bc, f // bf, d // bd
 
     return pl.pallas_call(

@@ -1,5 +1,8 @@
-"""Public grouped-matmul ops: tile selection via the cost model's analytic
-ranking, plus the composed gated expert FFN."""
+"""Public grouped-matmul ops: tiles resolved through the measured tuning
+db (repro.core.autotune_search, analytic cost-model fallback — the ranking
+that used to be inlined here as ``_pick_tiles`` now lives in
+``repro.core.autotune.gmm_tile_candidates``), plus the composed gated
+expert FFN."""
 
 from __future__ import annotations
 
@@ -9,46 +12,51 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import autotune
+from repro.core import autotune_search
 from repro.kernels.moe_gmm.kernel import gmm
 
 
-def _pick_tiles(c: int, d: int, f: int, dtype_bytes: int = 2):
-    """Rank MXU-aligned tiles by the analytic cost model (VMEM-feasible)."""
-    best = (128, 128, 128)
-    best_cost = float("inf")
-    for bc in (128, 256, 512):
-        for bf in (128, 256, 512):
-            for bd in (128, 256, 512):
-                vmem = dtype_bytes * (bc * bd + bd * bf) + 4 * bc * bf
-                if vmem > autotune.VMEM_BUDGET // 2:
-                    continue
-                steps = max(1, (c // bc) * (f // bf) * (d // bd))
-                t_step = 2 * bc * bf * bd / autotune.V5E_POD.peak_flops
-                cost = steps * (t_step + autotune.V5E_POD.chunk_overhead_s)
-                if cost < best_cost:
-                    best, best_cost = (bc, bf, bd), cost
-    return best
+_gmm_jit = jax.jit(
+    gmm, static_argnames=("block_c", "block_f", "block_d", "interpret"))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _tiles(c: int, d: int, f: int, dtype: str) -> tuple[int, int, int]:
+    cfg = autotune_search.lookup_or_search("moe_gmm", c=c, d=d, f=f,
+                                           dtype=dtype)
+    return cfg["block_c"], cfg["block_f"], cfg["block_d"]
+
+
 def grouped_matmul(x: jax.Array, w: jax.Array, *,
                    interpret: Optional[bool] = None) -> jax.Array:
     """x [E, C, d] @ w [E, d, f] -> [E, C, f]."""
+    # not jitted: the db lookup must run per call (see flash_attention)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    bc, bf, bd = _pick_tiles(x.shape[1], x.shape[2], w.shape[2])
-    return gmm(x, w, block_c=bc, block_f=bf, block_d=bd,
-               interpret=interpret)
+    bc, bf, bd = _tiles(x.shape[1], x.shape[2], w.shape[2], x.dtype.name)
+    return _gmm_jit(x, w, block_c=bc, block_f=bf, block_d=bd,
+                    interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(
+    jax.jit, static_argnames=("tiles_up", "tiles_down", "interpret"))
+def _expert_ffn_jit(x, gate, up, down, *, tiles_up, tiles_down, interpret):
+    bc, bf, bd = tiles_up
+    h = gmm(x, gate, block_c=bc, block_f=bf, block_d=bd,
+            interpret=interpret).astype(jnp.float32)
+    h = jax.nn.silu(h) * gmm(x, up, block_c=bc, block_f=bf, block_d=bd,
+                             interpret=interpret).astype(jnp.float32)
+    bc2, bf2, bd2 = tiles_down
+    return gmm(h.astype(x.dtype), down, block_c=bc2, block_f=bf2,
+               block_d=bd2, interpret=interpret)
+
+
 def expert_ffn(x, gate, up, down, *, interpret: Optional[bool] = None):
     """Gated expert FFN on capacity buffers: silu(x@gate) * (x@up) @ down."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    h = grouped_matmul(x, gate, interpret=interpret).astype(jnp.float32)
-    h = jax.nn.silu(h) * grouped_matmul(x, up, interpret=interpret).astype(
-        jnp.float32)
-    return grouped_matmul(h.astype(x.dtype), down,
-                          interpret=interpret)
+    # x@gate and x@up share (C, d, f); h@down contracts over f instead
+    tiles_up = _tiles(x.shape[1], x.shape[2], gate.shape[2], x.dtype.name)
+    tiles_down = _tiles(x.shape[1], gate.shape[2], down.shape[2],
+                        x.dtype.name)
+    return _expert_ffn_jit(x, gate, up, down, tiles_up=tiles_up,
+                           tiles_down=tiles_down, interpret=interpret)

@@ -1,0 +1,73 @@
+"""Kernel autotune launcher: measured block-size search for the four
+Pallas kernels, persisted to the tuning database.
+
+    PYTHONPATH=src python -m repro.launch.tune             # all kernels
+    PYTHONPATH=src python -m repro.launch.tune --quick     # tiny shapes
+    PYTHONPATH=src python -m repro.launch.tune --kernel flash_attention
+    PYTHONPATH=src python -m repro.launch.tune --no-persist
+
+Writes ``results/tuning_db.json`` (see ``repro.core.autotune_search``);
+every subsequent process resolves kernel configs from it with zero timed
+measurements — the serve engine and trainer inherit the tuned blocks the
+moment they call the ops.  The search is prior-pruned: the analytic cost
+model (seeded with the calibrated ``TuningContext``'s measured dispatch
+overhead) ranks candidates and only the top-k meet the wall clock.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core import autotune_search
+from repro.core.autotune_search import SearchOptions, TuningDB
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernel", default=None,
+                    choices=sorted(autotune_search.SPECS),
+                    help="tune one kernel (default: all four)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes + shallow search (CI-scale)")
+    ap.add_argument("--no-persist", action="store_true",
+                    help="search in memory only; leave the db untouched")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="timed reps per candidate (median wins)")
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="candidates kept from the analytic prior")
+    args = ap.parse_args()
+
+    shapes = (autotune_search.QUICK_SHAPES if args.quick
+              else autotune_search.REPRESENTATIVE_SHAPES)
+    kernels = [args.kernel] if args.kernel else sorted(shapes)
+    defaults = SearchOptions()
+    options = SearchOptions(
+        top_k=args.top_k if args.top_k else (4 if args.quick
+                                             else defaults.top_k),
+        reps=args.reps if args.reps else (2 if args.quick
+                                          else defaults.reps))
+    db = TuningDB() if args.no_persist else autotune_search.get_db()
+
+    print(f"backend={autotune_search.backend_name()} "
+          f"mode={autotune_search.mode()} "
+          f"db={'memory' if db.path is None else db.path}")
+    header = (f"{'kernel':18s} {'bucket':38s} {'analytic':26s} "
+              f"{'tuned':26s} {'ms(a)':>8s} {'ms(t)':>8s} "
+              f"{'speedup':>7s} {'timed':>5s}")
+    print(header)
+    for kernel in kernels:
+        for shape in shapes[kernel]:
+            res = autotune_search.search_kernel(
+                kernel, db=db, options=options, **shape)
+            print(f"{kernel:18s} {res.bucket:38s} "
+                  f"{str(res.analytic_config):26s} {str(res.config):26s} "
+                  f"{res.analytic_s * 1e3:8.2f} {res.measured_s * 1e3:8.2f} "
+                  f"{res.speedup:6.2f}x {res.n_timed:5d}")
+    if db.path is not None:
+        print(f"persisted {len(db)} entries -> {db.path}")
+        print("steady-state lookups now resolve these buckets with zero "
+              "measurements")
+
+
+if __name__ == "__main__":
+    main()

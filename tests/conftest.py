@@ -11,6 +11,13 @@ jax.config.update("jax_enable_x64", False)
 # calibrator build their own TuningContext explicitly.
 os.environ.setdefault("REPRO_CALIBRATION", "off")
 
+# Same hermeticity for the kernel tuning db: a results/tuning_db.json
+# written by a previous `repro.launch.tune` run must not change which
+# block sizes the kernel ops resolve — tests that exercise the measured
+# search opt in with their own REPRO_TUNING / REPRO_TUNING_DB (see
+# tests/test_autotune_search.py).
+os.environ.setdefault("REPRO_TUNING", "off")
+
 # Hypothesis profiles: CI runs derandomized (fixed seed — a red build must
 # be reproducible, not a lottery) with no deadline (shared runners stall
 # arbitrarily; a deadline flake teaches nothing).  Local runs keep fresh

@@ -1,0 +1,322 @@
+"""Measured kernel autotuner: db round-trip, bucket collisions, analytic
+fallbacks, divisor block fitting, and numerics invariance under tuned
+configs.
+
+The searches here use tiny shapes and a shallow budget (warmup=0, one
+rep): the *timing values* are meaningless on a CI box, but every property
+under test — who gets measured, what gets persisted, what a warm lookup
+costs — is count- and structure-based, not latency-based.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune, autotune_search
+from repro.core.autotune_search import SearchOptions, TuningDB
+
+FAST = SearchOptions(top_k=3, warmup=0, reps=1)
+
+FLASH_SHAPE = dict(sq=32, skv=32, d=16, dtype="float32", causal=True)
+ALL_SHAPES = {
+    "flash_attention": FLASH_SHAPE,
+    "decode_attention": dict(s=64, d=16, dtype="float32"),
+    "moe_gmm": dict(c=32, d=32, f=32, dtype="float32"),
+    "mamba_ssd": dict(s=32, p=16, n=16, dtype="float32"),
+}
+
+
+@pytest.fixture
+def db_path(tmp_path, monkeypatch):
+    """Isolated persistent db + search mode; process view reset around."""
+    path = tmp_path / "tuning_db.json"
+    monkeypatch.setenv("REPRO_TUNING", "search")
+    monkeypatch.setenv("REPRO_TUNING_DB", str(path))
+    autotune_search.reset_db()
+    yield path
+    autotune_search.reset_db()
+
+
+# ---------------------------------------------------------------------------
+# fit_block (the _resolve_blocks halving fix)
+# ---------------------------------------------------------------------------
+
+def test_fit_block_picks_largest_divisor():
+    # the motivating case: sq=96 with a tuned 128 must land on 96, not on
+    # the old halving loop's 32
+    assert autotune.fit_block(96, 128) == 96
+    assert autotune.fit_block(96, 64) == 48
+    assert autotune.fit_block(100, 32) == 25
+    assert autotune.fit_block(100, 128) == 100
+    assert autotune.fit_block(128, 32) == 32   # divisible: unchanged
+    assert autotune.fit_block(7, 4) == 1       # prime below target: floor
+    assert autotune.fit_block(1, 512) == 1
+
+
+def test_flash_non_pow2_seq_uses_divisor_blocks():
+    """sq=96 resolves to a 96-divisor block and still matches the oracle."""
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 96, 2, 16))
+    k = jax.random.normal(ks[1], (1, 96, 2, 16))
+    v = jax.random.normal(ks[2], (1, 96, 2, 16))
+    o = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    r = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_gmm_non_pow2_dims_use_divisor_tiles():
+    from repro.kernels.moe_gmm.kernel import gmm
+    from repro.kernels.moe_gmm.ref import gmm_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    x = jax.random.normal(ks[0], (2, 96, 96))
+    w = jax.random.normal(ks[1], (2, 96, 40))
+    # 64-tiles on 96-dims: the old halving landed on 32 (96%64 -> 32);
+    # divisor fitting keeps the much closer 48
+    o = gmm(x, w, block_c=64, block_f=64, block_d=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(gmm_ref(x, w)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_decode_non_pow2_split_fits_divisor():
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (2, 2, 16))
+    k = jax.random.normal(ks[1], (2, 96, 1, 16))
+    v = jax.random.normal(ks[2], (2, 96, 1, 16))
+    kv_len = jnp.array([96, 50], jnp.int32)
+    # 64 splits on s=96: the old halving collapsed to 32; the divisor fit
+    # keeps 48 (the closest feasible split count)
+    o = decode_attention(q, k, v, kv_len, num_splits=64, interpret=True)
+    r = decode_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# tuning db: round-trip, collisions, fallbacks
+# ---------------------------------------------------------------------------
+
+def test_search_persists_and_warm_reload_measures_nothing(db_path):
+    cfg = autotune_search.lookup_or_search(
+        "flash_attention", options=FAST, **FLASH_SHAPE)
+    assert set(cfg) == {"block_q", "block_k"}
+    assert autotune_search.measurement_count() > 0
+    raw = json.loads(db_path.read_text())
+    assert raw["kind"] == "tuning_db" and raw["version"] == 1
+    (entry,) = raw["payload"]["entries"].values()
+    assert entry["config"] == cfg
+    assert entry["measured_s"] <= entry["analytic_s"]
+
+    # a "new process": drop the in-memory view, reload from disk
+    autotune_search.reset_db()
+    before = autotune_search.measurement_count()
+    again = autotune_search.lookup_or_search(
+        "flash_attention", options=FAST, **FLASH_SHAPE)
+    assert again == cfg
+    assert autotune_search.measurement_count() == before
+
+
+def test_warm_db_resolves_all_four_kernels_with_zero_measurements(db_path):
+    """The acceptance criterion: warm db => zero timed measurements for
+    every kernel's config resolution."""
+    for kernel, shape in ALL_SHAPES.items():
+        autotune_search.search_kernel(kernel, options=FAST, **shape)
+    autotune_search.reset_db()  # fresh process over the persisted file
+    before = autotune_search.measurement_count()
+    for kernel, shape in ALL_SHAPES.items():
+        cfg = autotune_search.lookup_or_search(kernel, options=FAST, **shape)
+        assert cfg, kernel
+    assert autotune_search.measurement_count() == before
+
+
+def test_shape_bucket_collision_shares_one_entry(db_path):
+    """sq=96 and sq=128 round to the same bucket: one search serves both."""
+    first = autotune_search.lookup_or_search(
+        "flash_attention", options=FAST,
+        sq=96, skv=96, d=16, dtype="float32", causal=True)
+    before = autotune_search.measurement_count()
+    second = autotune_search.lookup_or_search(
+        "flash_attention", options=FAST,
+        sq=128, skv=128, d=16, dtype="float32", causal=True)
+    assert second == first
+    assert autotune_search.measurement_count() == before
+    assert len(autotune_search.get_db()) == 1
+    # a different head dim is a different bucket, not a collision
+    autotune_search.lookup_or_search(
+        "flash_attention", options=FAST,
+        sq=96, skv=96, d=32, dtype="float32", causal=True)
+    assert len(autotune_search.get_db()) == 2
+
+
+def test_cache_miss_falls_back_to_analytic_without_measuring(
+        db_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNING", "on")  # lookup-only mode
+    before = autotune_search.measurement_count()
+    cfg = autotune_search.lookup_or_search("flash_attention", **FLASH_SHAPE)
+    assert cfg == autotune_search.analytic_config(
+        "flash_attention", **FLASH_SHAPE)
+    assert autotune_search.measurement_count() == before
+    assert not db_path.exists()  # a miss must not fabricate db entries
+
+
+def test_tuning_off_ignores_a_warm_db(db_path, monkeypatch):
+    """REPRO_TUNING=off: analytic only, even when the db disagrees."""
+    marker = {"block_q": 16, "block_k": 16}
+    db = TuningDB.open(db_path)
+    spec = autotune_search.SPECS["flash_attention"]
+    bucket = spec.bucket(**FLASH_SHAPE)
+    db.record("flash_attention", autotune_search.backend_name(),
+              spec.bucket_key(bucket), marker)
+    autotune_search.reset_db()
+
+    monkeypatch.setenv("REPRO_TUNING", "off")
+    cfg = autotune_search.lookup_or_search("flash_attention", **FLASH_SHAPE)
+    assert cfg == autotune_search.analytic_config(
+        "flash_attention", **FLASH_SHAPE)
+
+    monkeypatch.setenv("REPRO_TUNING", "on")
+    autotune_search.reset_db()
+    assert autotune_search.lookup_or_search(
+        "flash_attention", **FLASH_SHAPE) == marker
+
+
+def test_corrupt_db_artifact_loads_as_empty(db_path, monkeypatch):
+    db_path.write_text("{not json")
+    monkeypatch.setenv("REPRO_TUNING", "on")
+    assert len(autotune_search.get_db()) == 0
+    db_path.write_text(json.dumps({"kind": "calibration", "version": 1,
+                                   "payload": {}}))
+    autotune_search.reset_db()
+    assert len(autotune_search.get_db()) == 0  # wrong kind: rejected
+
+
+# ---------------------------------------------------------------------------
+# numerics: tuned configs change latency, never values
+# ---------------------------------------------------------------------------
+
+def test_tuned_configs_match_goldens(db_path):
+    """Each op resolved through the searched db bit-compares (to kernel
+    tolerance) against the same op under the analytic config and the ref
+    oracle — the block size is a pure latency knob."""
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    from repro.kernels.mamba_ssd.ops import ssd
+    from repro.kernels.mamba_ssd.ref import ssd_ref
+    from repro.kernels.moe_gmm.ops import grouped_matmul
+    from repro.kernels.moe_gmm.ref import gmm_ref
+
+    for kernel, shape in ALL_SHAPES.items():
+        autotune_search.search_kernel(kernel, options=FAST, **shape)
+
+    ks = jax.random.split(jax.random.PRNGKey(9), 6)
+
+    q = jax.random.normal(ks[0], (1, 32, 2, 16))
+    k = jax.random.normal(ks[1], (1, 32, 2, 16))
+    v = jax.random.normal(ks[2], (1, 32, 2, 16))
+    tuned = autotune_search.lookup_or_search(
+        "flash_attention", **FLASH_SHAPE)
+    analytic = autotune_search.analytic_config(
+        "flash_attention", **FLASH_SHAPE)
+    o_tuned = flash_attention(q, k, v, interpret=True)  # resolves via db
+    o_analytic = flash_attention(
+        q, k, v, block_q=analytic["block_q"], block_k=analytic["block_k"],
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(o_tuned), np.asarray(o_analytic),
+                               atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(o_tuned), np.asarray(flash_attention_ref(q, k, v)),
+        atol=2e-5, rtol=2e-5)
+    del tuned
+
+    qd = jax.random.normal(ks[3], (2, 2, 16))
+    kd = jax.random.normal(ks[4], (2, 64, 1, 16))
+    vd = jax.random.normal(ks[5], (2, 64, 1, 16))
+    kv_len = jnp.array([64, 33], jnp.int32)
+    o = decode_attention(qd, kd, vd, kv_len, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(decode_attention_ref(qd, kd, vd, kv_len)),
+        atol=2e-5, rtol=2e-5)
+
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 32, 32))
+    w = jax.random.normal(jax.random.PRNGKey(11), (2, 32, 32))
+    np.testing.assert_allclose(
+        np.asarray(grouped_matmul(x, w, interpret=True)),
+        np.asarray(gmm_ref(x, w)), atol=1e-4, rtol=1e-4)
+
+    xs = jax.random.normal(jax.random.PRNGKey(12), (1, 32, 2, 16))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(13),
+                                           (1, 32, 2)))
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(14), (2,)))
+    b_in = jax.random.normal(jax.random.PRNGKey(15), (1, 32, 1, 16))
+    c_in = jax.random.normal(jax.random.PRNGKey(16), (1, 32, 1, 16))
+    y, _ = ssd(xs, dt, a, b_in, c_in, interpret=True)
+    yr, _ = ssd_ref(xs, dt, a, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4,
+                               rtol=1e-3)
+
+
+def test_db_warmed_mid_process_takes_effect_next_call(db_path, monkeypatch):
+    """The ops are not jitted at the top level, so config resolution runs
+    per call: a db warmed after the first call changes the second call's
+    config instead of being baked into a trace cache."""
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    monkeypatch.setenv("REPRO_TUNING", "on")
+    resolved = []
+    real = autotune_search.lookup_or_search
+
+    def spy(*args, **kwargs):
+        cfg = real(*args, **kwargs)
+        resolved.append(cfg)
+        return cfg
+
+    monkeypatch.setattr(autotune_search, "lookup_or_search", spy)
+    ks = jax.random.split(jax.random.PRNGKey(21), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 16))
+    k = jax.random.normal(ks[1], (1, 32, 2, 16))
+    v = jax.random.normal(ks[2], (1, 32, 2, 16))
+
+    flash_attention(q, k, v, interpret=True)        # cold: analytic pick
+    assert resolved[-1] == autotune_search.analytic_config(
+        "flash_attention", **FLASH_SHAPE)
+    res = autotune_search.search_kernel(            # warm the db in-process
+        "flash_attention", options=FAST, **FLASH_SHAPE)
+    flash_attention(q, k, v, interpret=True)        # warm: tuned config
+    assert len(resolved) == 2
+    assert resolved[-1] == res.config
+
+
+# ---------------------------------------------------------------------------
+# search mechanics
+# ---------------------------------------------------------------------------
+
+def test_analytic_pick_is_always_measured_and_never_beaten_on_record(
+        db_path):
+    res = autotune_search.search_kernel(
+        "moe_gmm", options=FAST, **ALL_SHAPES["moe_gmm"])
+    assert res.trials[0].config == res.analytic_config
+    assert res.measured_s <= res.analytic_s
+    assert res.n_timed == len(res.trials) * FAST.reps
+    assert res.speedup >= 1.0
+
+
+def test_candidates_are_ranked_and_deduped():
+    for kernel, shape in ALL_SHAPES.items():
+        spec = autotune_search.SPECS[kernel]
+        bucket = spec.bucket(**shape)
+        cands = spec.candidates(bucket)
+        assert cands, kernel
+        sigs = [tuple(sorted(c.items())) for c in cands]
+        assert len(sigs) == len(set(sigs)), f"{kernel}: duplicate candidates"

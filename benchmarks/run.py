@@ -37,8 +37,8 @@ def run_suite(name: str, fns) -> list[dict]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="sim | cost | taskflow | sched | serve | device "
-                         "| roofline | calib | kautotune")
+                    help="sim | cost | taskflow | sched | serve | paged "
+                         "| device | roofline | calib | kautotune")
     ap.add_argument("--quick", action="store_true",
                     help="run each suite's QUICK subset (CI smoke)")
     args = ap.parse_args()
@@ -46,8 +46,8 @@ def main() -> None:
     from benchmarks import (calibration_sweep, cost_model_bench,
                             device_knobs, dryrun_summary,
                             kernel_autotune_sweep, scheduler_sweep,
-                            serve_admission_sweep, sim_tables,
-                            taskflow_compare)
+                            serve_admission_sweep, serve_paged_sweep,
+                            sim_tables, taskflow_compare)
 
     mods = {
         "sim": sim_tables,
@@ -55,6 +55,7 @@ def main() -> None:
         "taskflow": taskflow_compare,
         "sched": scheduler_sweep,
         "serve": serve_admission_sweep,
+        "paged": serve_paged_sweep,
         "device": device_knobs,
         "roofline": dryrun_summary,
         "calib": calibration_sweep,

@@ -120,3 +120,106 @@ def decode_attention_fwd(
     l_glob = jnp.sum(l_part * w, axis=2)                     # [B,Hkv,G,1]
     o = jnp.sum(o_part * w, axis=2) / jnp.maximum(l_glob, 1e-30)
     return o.reshape(b, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: the KV cache is a shared page pool addressed per row
+# through a page table.  Split-K's fixed stride becomes the page: the grid's
+# third axis walks LOGICAL pages and the k/v index maps dereference the
+# prefetched page table, so each program DMAs exactly one physical page —
+# the gather never materializes a contiguous cache.  Pool row 0 is the
+# serve engine's reserved scratch page; it is simply never named by a live
+# page table, so the kernel needs no special case for it.
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(pt_ref, kv_len_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_ref, l_ref, *, page_size: int, d: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)                          # logical page index
+    kv_len = kv_len_ref[b]
+
+    q = q_ref[0, 0].astype(jnp.float32)           # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)           # [ps, D]
+    v = v_ref[0, 0].astype(jnp.float32)           # [ps, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (1.0 / np.sqrt(d))                    # [G, ps]
+    pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    m = jnp.max(s, axis=1, keepdims=True)         # [G, 1]
+    # wholly-masked page (past this row's length): exp(NEG_INF - NEG_INF)
+    # would be 1 — guard with m > -inf, identical to the split-K kernel
+    safe_m = jnp.maximum(m, -1e29)
+    p = jnp.where(m > NEG_INF / 2, jnp.exp(s - safe_m), 0.0)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    acc = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[0, 0, 0] = acc
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+def paged_decode_attention_fwd(
+    q: jax.Array,           # [B, Hq, D]
+    k_pool: jax.Array,      # [Np, ps, Hkv, D] shared page pool
+    v_pool: jax.Array,
+    page_table: jax.Array,  # [B, P] int32 pool indices per logical page
+    kv_len: jax.Array,      # [B] int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, d = q.shape
+    ps, hkv = k_pool.shape[1], k_pool.shape[2]
+    pages = page_table.shape[1]
+    g = hq // hkv
+
+    qt = q.reshape(b, hkv, g, d)
+    kt = k_pool.transpose(0, 2, 1, 3)   # [Np, Hkv, ps, D]
+    vt = v_pool.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_paged_decode_kernel, page_size=ps, d=d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j, *_: (b_, h, 0, 0)),
+            # the page-table dereference IS the gather: block (j) of row b_
+            # lives at pool row pt[b_, j]
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda b_, h, j, pt, kvl: (pt[b_, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda b_, h, j, pt, kvl: (pt[b_, j], h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g, d),
+                         lambda b_, h, j, *_: (b_, h, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g, 1),
+                         lambda b_, h, j, *_: (b_, h, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g, 1),
+                         lambda b_, h, j, *_: (b_, h, j, 0, 0)),
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, pages, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, pages, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, pages, g, 1), jnp.float32),
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="paged_flash_decode",
+    )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32), qt, kt, vt)
+
+    # identical partial-softmax combine: logical pages are the splits
+    m_glob = jnp.max(m_part, axis=2, keepdims=True)
+    w = jnp.exp(m_part - m_glob)
+    l_glob = jnp.sum(l_part * w, axis=2)
+    o = jnp.sum(o_part * w, axis=2) / jnp.maximum(l_glob, 1e-30)
+    return o.reshape(b, hq, d).astype(q.dtype)

@@ -8,11 +8,14 @@ from typing import Optional
 import jax
 
 from repro.core import autotune_search
-from repro.kernels.decode_attention.kernel import decode_attention_fwd
+from repro.kernels.decode_attention.kernel import (decode_attention_fwd,
+                                                  paged_decode_attention_fwd)
 
 
 _decode_jit = jax.jit(decode_attention_fwd,
                       static_argnames=("num_splits", "interpret"))
+_paged_jit = jax.jit(paged_decode_attention_fwd,
+                     static_argnames=("interpret",))
 
 
 def decode_attention(
@@ -35,3 +38,22 @@ def decode_attention(
         interpret = jax.default_backend() != "tpu"
     return _decode_jit(q, k, v, kv_len, num_splits=num_splits,
                        interpret=interpret)
+
+
+def paged_decode_attention(
+    q: jax.Array,           # [B, Hq, D]
+    k_pool: jax.Array,      # [Np, ps, Hkv, D]
+    v_pool: jax.Array,
+    page_table: jax.Array,  # [B, P] int32
+    kv_len: jax.Array,      # [B] int32
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash-decode against a shared page pool: the split count is the
+    page count (split size = page size, fixed by the allocator), so there
+    is no free block-size knob to tune — the paper's B is chosen once for
+    the whole memory system, and the db lookup is skipped."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _paged_jit(q, k_pool, v_pool, page_table, kv_len,
+                      interpret=interpret)

@@ -20,3 +20,15 @@ def decode_attention_ref(q, k, v, kv_len):
     p = jax.nn.softmax(sc, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
     return o.reshape(b, hq, d).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, page_table, kv_len):
+    """Paged oracle: gather the pool back to a contiguous per-row cache,
+    then run the dense reference.  q [B,Hq,D]; pools [Np,ps,Hkv,D];
+    page_table [B,P] int32; kv_len [B] int32 -> [B,Hq,D]."""
+    b = q.shape[0]
+    ps = k_pool.shape[1]
+    pages = page_table.shape[1]
+    k = k_pool[page_table].reshape(b, pages * ps, *k_pool.shape[2:])
+    v = v_pool[page_table].reshape(b, pages * ps, *v_pool.shape[2:])
+    return decode_attention_ref(q, k, v, kv_len)

@@ -40,6 +40,15 @@ def main():
                     help="admission policy (any registered scheduler)")
     ap.add_argument("--mode", default="continuous",
                     choices=("continuous", "rounds"))
+    ap.add_argument("--cache", default="contiguous",
+                    choices=("contiguous", "paged"),
+                    help="KV layout: per-slot max_len rows, or a page "
+                         "pool with per-slot page tables + prefix reuse")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged cache only)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page pool size; default matches the contiguous "
+                         "byte budget (slots * max_len / page_size)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -53,10 +62,15 @@ def main():
         print(f"loaded checkpoint step {step}")
 
     if args.requests > 0:
+        max_len = args.prompt_len + args.tokens + 1
+        if args.cache == "paged":       # pool leaves come in whole pages
+            max_len = -(-max_len // args.page_size) * args.page_size
         eng = Engine(model, params, ServeConfig(
-            max_len=args.prompt_len + args.tokens + 1,
+            max_len=max_len,
             temperature=args.temperature, slots=args.slots,
-            refill_schedule=args.schedule, mode=args.mode))
+            refill_schedule=args.schedule, mode=args.mode,
+            cache=args.cache, page_size=args.page_size,
+            num_pages=args.num_pages))
         rng = np.random.RandomState(0)
         prompts = [rng.randint(1, cfg.vocab_size, int(l)).astype(np.int32)
                    for l in rng.randint(max(2, args.prompt_len // 4),

@@ -261,18 +261,43 @@ def attn_apply(
                                   cfg.rope_theta)
             k = layers.apply_rope(k, jnp.broadcast_to(kpos, (b, src.shape[1])),
                                   cfg.rope_theta)
-        if per_row:
+        paged = "pt" in cache
+        if paged:
+            # Paged decode: k/v are a SHARED page pool [Np+1, ps, Hkv, D]
+            # (pool index 0 = reserved scratch), "pt" [B, P] maps each
+            # row's logical pages to pool pages.  Write one token into the
+            # row's current page, then gather the row's pages back to a
+            # contiguous [B, P*ps, Hkv, D] view — identical in shape and
+            # live values to the per-row contiguous cache, so the same
+            # attention call below is bit-identical to it (masked garbage
+            # positions contribute exactly exp(NEG_INF - m) = 0).
+            if not per_row:
+                raise ValueError("paged KV cache requires per-row lengths "
+                                 "(run set_cache_lengths / the serve path)")
+            pt = cache["pt"]
+            ps, pcount = cache["k"].shape[1], pt.shape[1]
+            page = jnp.minimum(length // ps, pcount - 1)
+            phys = jnp.take_along_axis(pt, page[:, None], axis=1)[:, 0]
+            off = length % ps
+            ck = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv, "pt": pt, "len": length + s}
+            k = ck[pt].reshape(b, pcount * ps, hkv, hd)
+            v = cv[pt].reshape(b, pcount * ps, hkv, hd)
+        elif per_row:
             # each row writes its token at its own position
             upd = lambda c, u, l: jax.lax.dynamic_update_slice(c, u, (l, 0, 0))
             ck = jax.vmap(upd)(cache["k"], k.astype(cache["k"].dtype), length)
             cv = jax.vmap(upd)(cache["v"], v.astype(cache["v"].dtype), length)
+            new_cache = {"k": ck, "v": cv, "len": length + s}
+            k, v = ck, cv
         else:
             ck = jax.lax.dynamic_update_slice(
                 cache["k"], k.astype(cache["k"].dtype), (0, length, 0, 0))
             cv = jax.lax.dynamic_update_slice(
                 cache["v"], v.astype(cache["v"].dtype), (0, length, 0, 0))
-        new_cache = {"k": ck, "v": cv, "len": length + s}
-        k, v = ck, cv
+            new_cache = {"k": ck, "v": cv, "len": length + s}
+            k, v = ck, cv
         from repro.distributed.sharding import active_policy
         pol = active_policy()
         if (s == 1 and pol is not None and pol.decode_seq_shard

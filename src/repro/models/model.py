@@ -485,7 +485,9 @@ class Model:
         position; probing two abstract batch sizes (eval_shape — nothing is
         allocated) identifies it per leaf.  ``per_row_len`` probes the
         continuous-serve cache form where ``len`` entries are [B] vectors
-        (see :meth:`set_cache_lengths`)."""
+        (see :meth:`set_cache_lengths`); with ``per_row_len=False`` the
+        scalar-``len`` leaves have no batch axis at all and map to ``-1``
+        (:meth:`splice_cache` leaves such leaves untouched)."""
 
         def make(bsz):
             cache = self.init_cache(bsz, 8)
@@ -500,6 +502,8 @@ class Model:
         def axis(a, b):
             diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
                      if x != y]
+            if not diffs:       # batch-independent leaf (scalar-form `len`)
+                return -1
             if len(diffs) != 1:
                 raise ValueError(
                     f"cannot identify batch axis: shapes {a.shape} vs "
@@ -515,10 +519,227 @@ class Model:
         ``axes`` is the tree from :meth:`cache_batch_axes`; both caches
         must share every non-batch dim (allocate the prefill cache at the
         same ``max_len``).  ``slot`` may be traced, so one jit of this
-        covers every slot."""
+        covers every slot.  Leaves whose axis is ``-1`` (batch-independent,
+        e.g. scalar-form ``len``) keep the destination's value."""
 
         def sp(dst, src, ax):
+            if ax < 0:
+                return dst
             piece = jax.lax.index_in_dim(src, row, ax, keepdims=False)
             return jax.lax.dynamic_update_index_in_dim(dst, piece, slot, ax)
 
         return jax.tree.map(sp, cache, prefill_cache, axes)
+
+    # ----------------------------------------------- paged-KV serving hooks
+
+    @property
+    def supports_paged_kv(self) -> bool:
+        """Whether this family can decode against a paged KV pool.
+
+        True where every growing cache leaf is a standard ``attn_apply``
+        KV cache (dense; hybrid's shared attention blocks) or where nothing
+        grows at all (ssm — the recurrent state is constant-size, so there
+        are no pages and the paged engine degenerates to per-slot state).
+        MoE/MLA keep a latent cache with its own access path
+        (``mla_apply``) and a batch-coupled router; paging them is open
+        work (see ROADMAP quantized/paged compounding)."""
+        return (self.cfg.family in ("dense", "ssm", "hybrid")
+                and not self.cfg.use_mla)
+
+    @property
+    def prefix_shareable(self) -> bool:
+        """Whether a token-prefix's cache state is fully reconstructable
+        from KV pages alone — the precondition for shared-prefix reuse.
+        Only true when *every* cache leaf is paged (dense): a recurrent
+        state (ssm/hybrid) lives outside the pages, and MoE's router makes
+        split prefills batch-coupled."""
+        return self.cfg.family == "dense" and not self.cfg.use_mla
+
+    def cache_page_spec(self, *, max_len: int = 8) -> Any:
+        """Tree of ints over the contiguous cache: each leaf's *token-axis*
+        index (the axis that scales with ``max_len``), or ``-1`` for leaves
+        that do not grow with sequence length (recurrent state, ``len``
+        entries).  Identified by probing two abstract ``max_len`` values —
+        nothing is allocated."""
+
+        a = jax.eval_shape(lambda: self.init_cache(2, max_len))
+        b = jax.eval_shape(lambda: self.init_cache(2, 2 * max_len))
+
+        def axis(x, y):
+            diffs = [i for i, (p, q) in enumerate(zip(x.shape, y.shape))
+                     if p != q]
+            if not diffs:
+                return -1
+            if len(diffs) != 1:
+                raise ValueError(
+                    f"cannot identify token axis: shapes {x.shape} vs "
+                    f"{y.shape} differ at {diffs}")
+            return diffs[0]
+
+        return jax.tree.map(axis, a, b)
+
+    def init_paged_cache(self, n_slots: int, max_len: int, num_pages: int,
+                         page_size: int, dtype=jnp.bfloat16) -> Any:
+        """Paged serve cache: every token-axis KV leaf becomes a *shared*
+        page pool, everything else stays per-slot.
+
+        A contiguous leaf ``[*stack, B, max_len, ...]`` becomes a pool
+        ``[*stack, num_pages + 1, page_size, ...]`` — the batch axis is
+        gone: slots address the pool through a page table instead of owning
+        a private row.  Pool index 0 is the reserved scratch page (decode
+        steps of idle slots write there; never allocated, never unmasked).
+        Each dict that holds paged leaves gains a ``"pt"`` page-table entry
+        ``[*stack, B, max_len // page_size]`` (identical across the stack —
+        page identity is layer-independent) and its ``len`` entry takes the
+        per-row ``[*stack, B]`` form.  Leaves with no token axis (recurrent
+        state) keep their per-slot ``[*stack, B, ...]`` shape.
+
+        ``attn_apply`` recognises the ``"pt"`` key and decodes through the
+        pool (scatter one token into the slot's current page, gather the
+        slot's pages back to a ``[B, max_len]`` view for attention) —
+        bit-identical to the contiguous per-row path.
+        """
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} must be a multiple of "
+                             f"page_size {page_size}")
+        if not self.supports_paged_kv:
+            raise ValueError(
+                f"family {self.cfg.family!r}"
+                f"{' (MLA)' if self.cfg.use_mla else ''} has no paged "
+                f"decode path — see Model.supports_paged_kv")
+        pages_per_seq = max_len // page_size
+        template = jax.eval_shape(
+            lambda: self.init_cache(n_slots, max_len, dtype))
+        spec = self.cache_page_spec()
+
+        def walk(tpl, sp):
+            if isinstance(tpl, dict):
+                out = {}
+                paged_stack = None
+                for key, sub in tpl.items():
+                    if key == "len":
+                        out["len"] = jnp.zeros(sub.shape + (n_slots,),
+                                               jnp.int32)
+                        continue
+                    out[key] = walk(sub, sp[key])
+                    if not isinstance(sub, dict) and sp[key] >= 0:
+                        paged_stack = sub.shape[: sp[key] - 1]
+                if paged_stack is not None:
+                    out["pt"] = jnp.zeros(
+                        paged_stack + (n_slots, pages_per_seq), jnp.int32)
+                return out
+            t = sp
+            if t < 0:
+                return jnp.zeros(tpl.shape, tpl.dtype)    # per-slot leaf
+            return jnp.zeros(tpl.shape[: t - 1]
+                             + (num_pages + 1, page_size)
+                             + tpl.shape[t + 1:], tpl.dtype)
+
+        return walk(template, spec)
+
+    def write_page(self, paged_cache, prefill_cache, phys, src_page, *,
+                   spec, page_size: int):
+        """Copy one page worth of KV — tokens ``[src_page * page_size,
+        (src_page + 1) * page_size)`` of row 0 of a contiguous prefill
+        cache — into physical page ``phys`` of every pool leaf.  ``phys``
+        and ``src_page`` may be traced (one jit covers every page); leaves
+        without a token axis (and ``len``/``pt`` entries) are untouched.
+        """
+        ps = page_size
+
+        def walk(pg, pre, sp):
+            if isinstance(pg, dict):
+                return {k: (walk(pg[k], pre[k], sp[k])
+                            if k in pre and k not in ("len",) else pg[k])
+                        for k in pg}
+            t = sp
+            if t < 0:
+                return pg
+            row = jax.lax.index_in_dim(pre, 0, t - 1, keepdims=False)
+            piece = jax.lax.dynamic_slice_in_dim(row, src_page * ps, ps,
+                                                 axis=t - 1)
+            return jax.lax.dynamic_update_index_in_dim(pg, piece, phys,
+                                                       axis=t - 1)
+
+        return walk(paged_cache, prefill_cache, spec)
+
+    def admit_paged_slot(self, paged_cache, prefill_cache, slot, length,
+                         pt_row, *, spec, axes):
+        """Point batch slot ``slot`` of a paged cache at its pages: set the
+        slot's page-table row to ``pt_row``, its ``len`` to ``length``, and
+        splice row 0 of the prefill cache into any per-slot (non-paged)
+        leaves — the paged twin of :meth:`splice_cache`.  KV pool leaves
+        are untouched (:meth:`write_page` fills them per page).
+        """
+
+        def walk(pg, pre, sp, ax):
+            if isinstance(pg, dict):
+                out = {}
+                for k in pg:
+                    if k == "pt":
+                        row = jnp.broadcast_to(
+                            pt_row, pg[k].shape[:-2] + pt_row.shape)
+                        out[k] = jax.lax.dynamic_update_index_in_dim(
+                            pg[k], row, slot, axis=pg[k].ndim - 2)
+                    elif k == "len":
+                        full = jnp.broadcast_to(
+                            jnp.asarray(length, jnp.int32), pg[k].shape[:-1])
+                        out[k] = jax.lax.dynamic_update_index_in_dim(
+                            pg[k], full, slot, axis=pg[k].ndim - 1)
+                    else:
+                        out[k] = walk(pg[k], pre[k], sp[k], ax[k])
+                return out
+            if sp >= 0:
+                return pg                                  # pool leaf
+            piece = jax.lax.index_in_dim(pre, 0, ax, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(pg, piece, slot, ax)
+
+        return walk(paged_cache, prefill_cache, spec, axes)
+
+    def gather_prefix_cache(self, paged_cache, pt_row, length, *, spec,
+                            page_size: int):
+        """Materialize a batch-of-1, scalar-``len`` contiguous cache from
+        the pages named by ``pt_row`` — the view :meth:`prefill_continue`
+        extends when a prefix-cache hit skips recomputation.  Only valid
+        for fully-paged families (:attr:`prefix_shareable`): a per-slot
+        leaf cannot be reconstructed from pages."""
+
+        def walk(pg, sp):
+            if isinstance(pg, dict):
+                out = {}
+                for k, sub in pg.items():
+                    if k == "pt":
+                        continue
+                    if k == "len":
+                        out[k] = jnp.broadcast_to(
+                            jnp.asarray(length, jnp.int32), sub.shape[:-1])
+                        continue
+                    out[k] = walk(sub, sp[k])
+                return out
+            t = sp
+            if t < 0:
+                raise ValueError(
+                    "gather_prefix_cache needs a fully-paged cache "
+                    "(Model.prefix_shareable families only)")
+            got = jnp.take(pg, pt_row, axis=t - 1)   # [*stack, P, ps, ...]
+            shp = got.shape
+            got = got.reshape(shp[: t - 1] + (shp[t - 1] * shp[t],)
+                              + shp[t + 1:])
+            return jnp.expand_dims(got, t - 1)       # [*stack, 1, S, ...]
+
+        return walk(paged_cache, spec)
+
+    def prefill_continue(self, params, tokens, cache):
+        """Extend an existing scalar-``len`` cache by ``tokens`` [B, S]
+        (S >= 1): the continuation prefill a prefix-cache hit runs over
+        just the uncached suffix.  Returns (logits at the last new token
+        [B, V], updated cache) — the multi-token sibling of
+        :meth:`decode_step`."""
+        cfg = self.cfg
+        batch = {"tokens": tokens}
+        x = layers.embed(params["embed"], tokens).astype(cfg.dtype)
+        x = constrain(x, "act_btd")
+        x, cache, _ = self._backbone(params, x, batch, cache, train=False)
+        x = layers.rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+        logits = self._logits(params, x)[:, 0]
+        return logits.astype(jnp.float32), cache

@@ -1,16 +1,20 @@
-from repro.serve import engine, queue, telemetry
+from repro.serve import engine, paged_cache, queue, telemetry
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.paged_cache import PageAllocator, PrefixCache
 from repro.serve.queue import Request, RequestQueue
 from repro.serve.telemetry import RequestTelemetry, ServeReport
 
 __all__ = [
     "Engine",
+    "PageAllocator",
+    "PrefixCache",
     "Request",
     "RequestQueue",
     "RequestTelemetry",
     "ServeConfig",
     "ServeReport",
     "engine",
+    "paged_cache",
     "queue",
     "telemetry",
 ]

@@ -72,6 +72,17 @@ class ServeConfig:
     # prefill widths to specialize (pad-safe families only); None = powers
     # of two from 8.  Exact lengths are used where padding is unsafe.
     prefill_buckets: Optional[Sequence[int]] = None
+    # ---- cache backend (continuous mode) ----
+    cache: str = "contiguous"   # "contiguous" | "paged"
+    page_size: int = 16         # tokens per KV page (must divide max_len)
+    # pool pages; None = slots * max_len / page_size (same KV bytes as the
+    # contiguous engine — shrink it to trade memory against deferrals)
+    num_pages: Optional[int] = None
+    prefix_cache: bool = True   # shared-prefix page reuse (paged + dense)
+    # free-list claim policy; None = refill_schedule (one knob drives both
+    # the admission counter and the page counter)
+    page_alloc_schedule: Optional[str] = None
+    page_alloc_block: Optional[int] = None  # pages per claim FAA
 
 
 class Engine:
@@ -194,6 +205,10 @@ class Engine:
                     f"request {r.rid}: prompt ({r.prompt_len}) + token "
                     f"budget ({budget}) exceeds max_len "
                     f"{self.cfg.max_len} — the cache would overflow")
+        if self.cfg.cache != "contiguous" and self.cfg.mode != "continuous":
+            raise ValueError(
+                f"cache={self.cfg.cache!r} needs mode='continuous' "
+                f"(the rounds barrier has no slot lifecycle to page)")
         if self.cfg.mode == "continuous":
             return self._serve_continuous(requests, max_new_tokens, seed)
         if self.cfg.mode == "rounds":
@@ -234,18 +249,12 @@ class Engine:
     def _serve_continuous(self, requests: List[Request],
                           max_new_tokens: int, seed: int) -> list:
         cfg = self.cfg
-        model = self.model
-        self._ensure_splice()
         block = cfg.admission_block
         if block is None:
             block = rt.tuning().admission_block(len(requests), cfg.slots)
         queue = RequestQueue(requests, cfg.slots, cfg.refill_schedule,
                              block_size=block)
         self.refill_stats = [queue.plan.stats]
-        dtype = jnp.dtype(cfg.cache_dtype)
-        cache = model.set_cache_lengths(
-            model.init_cache(cfg.slots, cfg.max_len, dtype),
-            np.zeros(cfg.slots, np.int32))
         tok = np.zeros(cfg.slots, np.int32)
         slot_req: List[Optional[Request]] = [None] * cfg.slots
         slot_cap = np.zeros(cfg.slots, np.int64)
@@ -255,11 +264,15 @@ class Engine:
                                          prompt_len=r.prompt_len)
                  for r in requests}
         tick = 0
-        t0 = time.monotonic()
 
         def cap_of(req: Request) -> int:
             return (max_new_tokens if req.max_new_tokens is None
                     else min(req.max_new_tokens, max_new_tokens))
+
+        from repro.serve.paged_cache import make_cache_backend
+        backend = make_cache_backend(self)
+        backend.validate(requests, cap_of)
+        t0 = time.monotonic()
 
         def finish(slot: int) -> None:
             req = slot_req[slot]
@@ -268,10 +281,12 @@ class Engine:
             tm.finish_s = time.monotonic() - t0
             tm.decode_tokens = max(0, len(outputs[req.rid]) - 1)
             slot_req[slot] = None
+            backend.finish(slot)
 
         while True:
             # refill every free slot in flight — no round barrier, so a
             # long sequence elsewhere never blocks this admission
+            progress = False
             for s in range(cfg.slots):
                 if slot_req[s] is not None:
                     continue
@@ -284,18 +299,21 @@ class Engine:
                     telem[req.rid].admit_tick = tick
                     telem[req.rid].finish_tick = tick
                     telem[req.rid].finish_s = time.monotonic() - t0
+                    progress = True
                     continue
-                width = self._bucket_width(req.prompt_len)
-                toks = np.zeros((1, width), np.int32)
-                toks[0, : req.prompt_len] = req.prompt
-                logits, pcache = self._prefill_padded(
-                    self.params, jnp.asarray(toks),
-                    jnp.asarray([req.prompt_len], jnp.int32))
-                cache = self._splice(cache, pcache,
-                                     jnp.asarray(s, jnp.int32))
+                res = backend.admit(s, req, cap_of(req))
+                if res is None:
+                    # partial admission: the request's page demand exceeds
+                    # the free pool right now — back on this slot's backlog
+                    # (still next in its claim order), retry once decode
+                    # ticks free pages
+                    queue.push_back(s, req)
+                    telem[req.rid].deferred_ticks += 1
+                    continue
+                progress = True
                 key = jax.random.fold_in(jax.random.PRNGKey(seed), req.rid)
                 key, k0 = jax.random.split(key)
-                first = self._sample_row(logits[0], k0)
+                first = self._sample_row(res.logits_row, k0)
                 slot_req[s] = req
                 slot_cap[s] = cap_of(req)
                 slot_key[s] = key
@@ -305,17 +323,28 @@ class Engine:
                 tm.admit_tick = tick
                 tm.ttft_s = time.monotonic() - t0
                 tm.stolen = stolen
+                tm.prefill_tokens = res.prefill_tokens
+                tm.prefix_hit_tokens = res.prefix_hit_tokens
                 if first == cfg.eos_id or slot_cap[s] <= 1:
                     finish(s)
 
             live = [s for s in range(cfg.slots) if slot_req[s] is not None]
             if not live and queue.pending == 0:
                 break
-            if not live:        # every remaining request finished on admit
-                continue
+            if not live:
+                if not progress:
+                    # nothing running, nothing admitted, requests pending:
+                    # no decode tick can free pages, so retrying is a spin.
+                    # validate() makes this unreachable; keep it loud.
+                    raise RuntimeError(
+                        f"refill deadlock: {queue.pending} request(s) "
+                        f"pending, no slot live, and no admission can "
+                        f"proceed")
+                continue    # every admitted request finished on its first
+                            # token; loop back for the rest of the queue
 
-            logits, cache = self._decode(self.params,
-                                         jnp.asarray(tok)[:, None], cache)
+            logits, backend.cache = self._decode(
+                self.params, jnp.asarray(tok)[:, None], backend.cache)
             tick += 1
             greedy_toks = (np.asarray(self._argmax(logits))
                            if cfg.temperature <= 0 else None)
@@ -350,6 +379,9 @@ class Engine:
             admission_steals=queue.steals,
             requests=[telem[r.rid] for r in requests],
         )
+        self.last_report.prefill_tokens = int(
+            sum(t.prefill_tokens for t in telem.values()))
+        backend.fill_report(self.last_report)
         return results
 
     # --------------------------------------------- legacy round barrier

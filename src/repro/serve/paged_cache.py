@@ -1,0 +1,520 @@
+"""Paged KV cache: page pool, registry-driven free list, prefix reuse.
+
+The contiguous serve cache reserves ``max_len`` rows per slot, so memory —
+not compute — caps concurrency.  Here KV memory is a pool of fixed-size
+pages and each slot holds only a page table; a request occupies exactly
+``ceil((prompt + budget) / page_size)`` pages, so a fixed byte budget
+admits strictly more concurrent short requests than it has contiguous
+slots' worth of rows.
+
+The free list is the paper's experiment in miniature: page claims run as a
+real ParallelFor (pages to claim = iteration space, decode slots = the
+threads) under whichever scheduler the registry names, so
+:class:`PageAllocator` inherits every policy's FAA behavior — one shared
+claim counter (``faa``), per-group lanes (``hierarchical``), local queues
+(``stealing``) — and its :class:`ScheduleStats` land in the serve report
+alongside the admission telemetry.  Schweizer et al.'s contended-FAA
+measurements and Ahmad et al.'s atomics-free forking (PAPERS.md) bracket
+the design space these policies sweep.
+
+:class:`PrefixCache` adds shared-prefix reuse on top of the refcounts:
+prompt pages are keyed by a chained page-granular token hash (a trie — no
+hash collisions by construction), and a request whose prompt extends a
+cached prefix maps the cached pages into its own page table (refcount +1,
+zero prefill recompute for those tokens) and prefills only the suffix.
+Eviction is LRU over *leaf* entries whose page the cache alone still
+references — a page shared with any live request is never reclaimed.
+
+The two backend classes at the bottom give ``serve/engine.py`` one seam:
+the engine's refill loop calls ``admit`` / ``finish`` and never touches
+cache layout.  ``admit`` returning None (page pressure) is the partial-
+admission signal — the engine pushes the request back onto the slot's
+backlog and retries after decode ticks free pages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import parallel_for as pf
+from repro.core.schedulers import ScheduleStats
+
+# ---------------------------------------------------------------------------
+# Page allocator
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Refcounted free-list allocator over physical pages ``1..num_pages``.
+
+    Page 0 is the reserved scratch page (idle decode slots write there) —
+    it is never in the free list and never allocatable.  Claims run under
+    ``schedule`` via :func:`parallel_for_stats` with ``slots`` threads, so
+    ``stats`` holds the *policy's own* FAA decomposition per claim batch.
+
+    Guards (the property suite's contracts): a page leaves the free list
+    with refcount exactly 0 and returns only at refcount 0 (use-after-free
+    / exactly-once), ``free`` below refcount 1 raises (double free), and
+    ``share`` of a dead page raises.
+    """
+
+    def __init__(self, num_pages: int, *, slots: int = 1,
+                 schedule="faa", block_size: Optional[int] = None):
+        if num_pages < 1:
+            raise ValueError(f"need at least one page, got {num_pages}")
+        self.num_pages = num_pages
+        self.slots = max(1, int(slots))
+        self.schedule = schedule
+        self.block_size = block_size
+        # pop() hands out ascending page ids on a fresh pool
+        self._free = list(range(num_pages, 0, -1))
+        self.refcount = np.zeros(num_pages + 1, np.int64)
+        self.stats: List[ScheduleStats] = []
+        self.pages_allocated = 0
+        self.pages_freed = 0
+        self.peak_live = 0
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_count(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def try_alloc(self, n: int) -> Optional[List[int]]:
+        """Claim ``n`` pages, or None if the pool cannot cover them (the
+        caller defers — partial admission).  The claim loop is the paper's
+        ParallelFor: each iteration is one page grab, and the policy
+        decides how many grabs ride on each shared-counter FAA."""
+        if n < 0:
+            raise ValueError(f"cannot claim {n} pages")
+        if n == 0:
+            return []
+        if n > len(self._free):
+            return None
+        got = np.zeros(n, np.int64)
+        lock = threading.Lock()
+
+        def claim(i: int) -> None:
+            with lock:
+                page = self._free.pop()
+                if self.refcount[page] != 0:
+                    raise RuntimeError(
+                        f"free list handed out live page {page} "
+                        f"(refcount {self.refcount[page]})")
+                self.refcount[page] = 1
+                got[i] = page
+
+        stats = pf.parallel_for_stats(
+            claim, n, n_threads=self.slots, schedule=self.schedule,
+            block_size=self.block_size, layer="paged_alloc")
+        self.stats.append(stats)
+        self.pages_allocated += n
+        self.peak_live = max(self.peak_live, self.live_count)
+        return [int(p) for p in got]
+
+    def alloc(self, n: int) -> List[int]:
+        got = self.try_alloc(n)
+        if got is None:
+            raise RuntimeError(
+                f"out of pages: need {n}, free {len(self._free)} "
+                f"of {self.num_pages}")
+        return got
+
+    def share(self, pages) -> None:
+        """Add one reference to each page (prefix fork / cache insert)."""
+        for p in pages:
+            p = int(p)
+            self._check_range(p)
+            if self.refcount[p] < 1:
+                raise RuntimeError(
+                    f"share of dead page {p} (use-after-free)")
+            self.refcount[p] += 1
+
+    def free(self, pages) -> None:
+        """Drop one reference per page; a page rejoins the free list only
+        when its last reference dies — shared pages survive."""
+        for p in pages:
+            p = int(p)
+            self._check_range(p)
+            if self.refcount[p] < 1:
+                raise RuntimeError(f"double free of page {p}")
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                self.pages_freed += 1
+
+    def _check_range(self, p: int) -> None:
+        if not 1 <= p <= self.num_pages:
+            raise ValueError(
+                f"page {p} out of range [1, {self.num_pages}] "
+                f"(page 0 is the reserved scratch page)")
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache
+# ---------------------------------------------------------------------------
+
+
+class _Entry:
+    __slots__ = ("eid", "key", "page", "parent", "children", "stamp")
+
+    def __init__(self, eid, key, page, parent):
+        self.eid = eid
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children = 0
+        self.stamp = 0
+
+
+class PrefixCache:
+    """Token-prefix -> physical-page map at page granularity.
+
+    Entries form a trie: an entry's key is ``(parent_id, page_tokens)``,
+    so two prompts share exactly their common page-aligned prefix and
+    lookups are collision-free.  The cache holds one allocator reference
+    per entry; ``evict`` releases LRU leaves whose page nobody else
+    references, never an interior node (children would dangle) and never a
+    page a live request shares.
+    """
+
+    def __init__(self, alloc: PageAllocator, page_size: int):
+        self.alloc = alloc
+        self.page_size = page_size
+        self._by_key: Dict[tuple, _Entry] = {}
+        self._clock = 0
+        self._next_id = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _page_tokens(self, prompt, j: int) -> tuple:
+        ps = self.page_size
+        return tuple(int(t) for t in prompt[j * ps:(j + 1) * ps])
+
+    def match(self, prompt) -> List[int]:
+        """Longest cached page-prefix of ``prompt``, as physical pages in
+        logical order.  Capped at ``(len - 1) // page_size`` pages: at
+        least one suffix token always stays uncached, because the first
+        output token needs logits the pages cannot carry."""
+        limit = (len(prompt) - 1) // self.page_size
+        pages: List[int] = []
+        parent = -1
+        for j in range(limit):
+            e = self._by_key.get((parent, self._page_tokens(prompt, j)))
+            if e is None:
+                break
+            pages.append(e.page)
+            e.stamp = self._tick()
+            parent = e.eid
+        return pages
+
+    def insert(self, prompt, pages) -> None:
+        """Record every page fully covered by ``prompt`` (``pages`` is the
+        request's logical->physical map).  New entries take a reference on
+        their page; pages already cached keep the original copy."""
+        full = len(prompt) // self.page_size
+        parent, parent_e = -1, None
+        for j in range(full):
+            key = (parent, self._page_tokens(prompt, j))
+            e = self._by_key.get(key)
+            if e is None:
+                self.alloc.share([pages[j]])
+                e = _Entry(self._next_id, key, int(pages[j]), parent_e)
+                self._next_id += 1
+                self._by_key[key] = e
+                if parent_e is not None:
+                    parent_e.children += 1
+            e.stamp = self._tick()
+            parent, parent_e = e.eid, e
+
+    def evict(self, need: int) -> int:
+        """Release up to ``need`` pages, LRU-first over evictable leaves
+        (no children, refcount 1 — the cache is the sole owner).  Evicting
+        a leaf can expose its parent, so the loop re-scans until satisfied
+        or stuck; returns the number of pages actually freed."""
+        freed = 0
+        while freed < need:
+            cands = [e for e in self._by_key.values()
+                     if e.children == 0 and self.alloc.refcount[e.page] == 1]
+            if not cands:
+                break
+            e = min(cands, key=lambda c: c.stamp)
+            del self._by_key[e.key]
+            if e.parent is not None:
+                e.parent.children -= 1
+            self.alloc.free([e.page])
+            self.evictions += 1
+            freed += 1
+        return freed
+
+
+# ---------------------------------------------------------------------------
+# Serve backends
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AdmitResult:
+    """What the engine needs back from one successful admission."""
+
+    logits_row: Any               # [V] first-token logits for the slot
+    prefill_tokens: int           # prompt tokens actually computed
+    prefix_hit_tokens: int        # prompt tokens served from shared pages
+
+
+class ContiguousBackend:
+    """The seed behavior behind the backend seam: one max_len cache row
+    per slot, refill = pad-masked prefill + row splice."""
+
+    name = "contiguous"
+
+    def __init__(self, engine):
+        self.eng = engine
+        engine._ensure_splice()
+        cfg = engine.cfg
+        model = engine.model
+        self.cache = model.set_cache_lengths(
+            model.init_cache(cfg.slots, cfg.max_len,
+                             jnp.dtype(cfg.cache_dtype)),
+            np.zeros(cfg.slots, np.int32))
+
+    def validate(self, requests, cap_of) -> None:
+        pass
+
+    def admit(self, slot: int, req, cap: int) -> Optional[AdmitResult]:
+        eng = self.eng
+        logits, pcache = _prefill_request(eng, req)
+        self.cache = eng._splice(self.cache, pcache,
+                                 jnp.asarray(slot, jnp.int32))
+        return AdmitResult(logits[0], req.prompt_len, 0)
+
+    def finish(self, slot: int) -> None:
+        pass
+
+    def fill_report(self, report) -> None:
+        report.cache = self.name
+
+
+def _prefill_request(eng, req):
+    """One request through the engine's bucketed pad-masked prefill."""
+    width = eng._bucket_width(req.prompt_len)
+    toks = np.zeros((1, width), np.int32)
+    toks[0, : req.prompt_len] = req.prompt
+    return eng._prefill_padded(eng.params, jnp.asarray(toks),
+                               jnp.asarray([req.prompt_len], jnp.int32))
+
+
+class PagedBackend:
+    """Paged pool + page-table decode behind the same seam.
+
+    Families: dense pages its full KV; hybrid pages the shared attention
+    leaves and keeps the recurrent state per-slot; ssm has nothing that
+    grows, so it demands zero pages and degenerates to per-slot state
+    under the same admission flow.  Prefix reuse is dense-only
+    (``Model.prefix_shareable``): recurrent state cannot be rebuilt from
+    pages, and MoE's batch-coupled router breaks split-prefill
+    equivalence.
+    """
+
+    name = "paged"
+
+    def __init__(self, engine):
+        self.eng = engine
+        cfg = engine.cfg
+        model = engine.model
+        if not model.supports_paged_kv:
+            raise ValueError(
+                f"family {model.cfg.family!r}"
+                f"{' (MLA)' if model.cfg.use_mla else ''} has no paged "
+                f"decode path (moe/MLA latent caches are future work) — "
+                f"use ServeConfig(cache='contiguous')")
+        if cfg.max_len % cfg.page_size:
+            raise ValueError(
+                f"max_len {cfg.max_len} must be a multiple of page_size "
+                f"{cfg.page_size}")
+        self.ps = cfg.page_size
+        self.pages_per_seq = cfg.max_len // cfg.page_size
+        self.spec = model.cache_page_spec()
+        leaves = jax.tree.leaves(self.spec)
+        self.has_pages = any(ax >= 0 for ax in leaves)
+        self.num_pages = cfg.num_pages
+        if self.num_pages is None:
+            # slot parity: same KV bytes as the contiguous engine
+            self.num_pages = cfg.slots * self.pages_per_seq
+        self.alloc = PageAllocator(
+            self.num_pages, slots=cfg.slots,
+            schedule=cfg.page_alloc_schedule or cfg.refill_schedule,
+            block_size=cfg.page_alloc_block)
+        self.prefix: Optional[PrefixCache] = None
+        if cfg.prefix_cache and model.prefix_shareable and self.has_pages:
+            self.prefix = PrefixCache(self.alloc, self.ps)
+        dtype = jnp.dtype(cfg.cache_dtype)
+        self.cache = model.init_paged_cache(
+            cfg.slots, cfg.max_len, self.num_pages, self.ps, dtype)
+        self.slot_pages: List[List[int]] = [[] for _ in range(cfg.slots)]
+        self.deferred = 0
+
+        spec, axes = self.spec, model.cache_batch_axes()
+        self._write = jax.jit(lambda c, pc, phys, j: model.write_page(
+            c, pc, phys, j, spec=spec, page_size=self.ps))
+        self._admit = jax.jit(
+            lambda c, pc, slot, ln, row: model.admit_paged_slot(
+                c, pc, slot, ln, row, spec=spec, axes=axes))
+        self._gather = jax.jit(lambda c, row, ln: model.gather_prefix_cache(
+            c, row, ln, spec=spec, page_size=self.ps))
+        self._continue = jax.jit(model.prefill_continue)
+        self._release = jax.jit(_release_slot)
+
+    # ------------------------------------------------------------- admission
+
+    def demand(self, req, cap: int) -> int:
+        """Pages the request will occupy over its whole life (prompt +
+        token budget, allocated up front so admission — not decode — is
+        the only place the pool can run dry)."""
+        if not self.has_pages:
+            return 0
+        return -(-(req.prompt_len + cap) // self.ps)
+
+    def validate(self, requests, cap_of) -> None:
+        for r in requests:
+            d = self.demand(r, cap_of(r))
+            if d > self.num_pages:
+                raise ValueError(
+                    f"request {r.rid}: needs {d} pages but the pool holds "
+                    f"{self.num_pages} — raise num_pages or trim the "
+                    f"request")
+
+    def admit(self, slot: int, req, cap: int) -> Optional[AdmitResult]:
+        eng = self.eng
+        if not self.has_pages:          # ssm: constant-size per-slot state
+            logits, pcache = _prefill_request(eng, req)
+            self.cache = self._admit(
+                self.cache, pcache, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(req.prompt_len, jnp.int32),
+                jnp.zeros(self.pages_per_seq, jnp.int32))
+            return AdmitResult(logits[0], req.prompt_len, 0)
+
+        total = self.demand(req, cap)
+        matched: List[int] = []
+        if self.prefix is not None:
+            matched = self.prefix.match(req.prompt)
+        if matched:
+            # pin before any eviction: a page named by this admission must
+            # never be reclaimed to satisfy this same admission
+            self.alloc.share(matched)
+        need = total - len(matched)
+        if need > self.alloc.free_count and self.prefix is not None:
+            self.prefix.evict(need - self.alloc.free_count)
+        got = self.alloc.try_alloc(need)
+        if got is None:                 # page pressure: defer, retry later
+            if matched:
+                self.alloc.free(matched)
+            self.deferred += 1
+            return None
+
+        pages = matched + got
+        pt_row = np.zeros(self.pages_per_seq, np.int32)
+        pt_row[: len(pages)] = pages
+        pt_dev = jnp.asarray(pt_row)
+        mtok = len(matched) * self.ps
+        prompt_pages = -(-req.prompt_len // self.ps)
+
+        if matched:
+            # zero prefill recompute for the cached prefix: materialize a
+            # batch-of-1 contiguous view of the shared pages and run the
+            # continuation prefill over the suffix only
+            view = self._gather(self.cache, pt_dev,
+                                jnp.asarray(mtok, jnp.int32))
+            suffix = jnp.asarray(req.prompt[mtok:], jnp.int32)[None, :]
+            logits, pcache = self._continue(eng.params, suffix, view)
+        else:
+            logits, pcache = _prefill_request(eng, req)
+        for j in range(len(matched), prompt_pages):
+            self.cache = self._write(self.cache, pcache,
+                                     jnp.asarray(pages[j], jnp.int32),
+                                     jnp.asarray(j, jnp.int32))
+        self.cache = self._admit(self.cache, pcache,
+                                 jnp.asarray(slot, jnp.int32),
+                                 jnp.asarray(req.prompt_len, jnp.int32),
+                                 pt_dev)
+        if self.prefix is not None:
+            if matched:
+                self.prefix.hits += 1
+                self.prefix.hit_tokens += mtok
+            self.prefix.insert(req.prompt, pages)
+        self.slot_pages[slot] = pages
+        return AdmitResult(logits[0], req.prompt_len - mtok, mtok)
+
+    def finish(self, slot: int) -> None:
+        """Release the slot's page references and detach it from the pool:
+        the page table row goes back to the scratch page and the length to
+        0, so this (now idle) slot's dead decode writes land in scratch
+        page 0 instead of scribbling over reused pages."""
+        if self.slot_pages[slot]:
+            self.alloc.free(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+        if self.has_pages:
+            self.cache = self._release(self.cache,
+                                       jnp.asarray(slot, jnp.int32))
+
+    def fill_report(self, report) -> None:
+        report.cache = self.name
+        report.num_pages = self.num_pages
+        report.pages_allocated = self.alloc.pages_allocated
+        report.pages_freed = self.alloc.pages_freed
+        report.peak_pages_live = self.alloc.peak_live
+        report.page_alloc_stats = list(self.alloc.stats)
+        report.deferred_admissions = self.deferred
+        if self.prefix is not None:
+            report.prefix_hits = self.prefix.hits
+            report.prefix_hit_tokens = self.prefix.hit_tokens
+
+
+def _release_slot(cache, slot):
+    """Zero one slot's page-table row and length everywhere in the tree."""
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            if k == "pt":
+                z = jnp.zeros(v.shape[:-2] + v.shape[-1:], v.dtype)
+                out[k] = jax.lax.dynamic_update_index_in_dim(
+                    v, z, slot, v.ndim - 2)
+            elif k == "len":
+                z = jnp.zeros(v.shape[:-1], v.dtype)
+                out[k] = jax.lax.dynamic_update_index_in_dim(
+                    v, z, slot, v.ndim - 1)
+            else:
+                out[k] = walk(v)
+        return out
+
+    return walk(cache)
+
+
+def make_cache_backend(engine):
+    """Build the backend named by ``ServeConfig.cache``."""
+    kind = engine.cfg.cache
+    if kind == "contiguous":
+        return ContiguousBackend(engine)
+    if kind == "paged":
+        return PagedBackend(engine)
+    raise ValueError(f"unknown ServeConfig.cache {kind!r} "
+                     f"(expected 'contiguous' or 'paged')")

@@ -119,3 +119,15 @@ class RequestQueue:
         rid = self._backlogs[victim].pop()
         self.steals += 1
         return self.requests[rid], True
+
+    def push_back(self, slot: int, request: Request) -> None:
+        """Return an admitted-but-unstarted request to ``slot``'s backlog
+        front (it stays next in claim order for that slot).
+
+        This is the partial-admission escape hatch: the plan assumes one
+        slot per request, but a paged engine may find a popped request's
+        *page* demand exceeds the free pool mid-refill.  Pushing it back —
+        rather than dropping it or spinning on ``next_for`` — keeps the
+        accounting exact (``pending`` includes it again) and lets the
+        refill loop retry once decode ticks free pages."""
+        self._backlogs[slot].appendleft(request.rid)

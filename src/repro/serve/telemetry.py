@@ -31,6 +31,9 @@ class RequestTelemetry:
     finish_s: float = float("nan")
     decode_tokens: int = 0
     stolen: bool = False          # admitted via slot steal, not its own plan
+    prefill_tokens: int = 0       # tokens actually run through prefill
+    prefix_hit_tokens: int = 0    # prompt tokens served from shared pages
+    deferred_ticks: int = 0       # refill passes bounced on page pressure
 
     @property
     def queue_wait_ticks(self) -> int:
@@ -62,6 +65,28 @@ class ServeReport:
     admission: Optional[ScheduleStats]
     admission_steals: int
     requests: List[RequestTelemetry] = dataclasses.field(default_factory=list)
+    # ----- paged-cache telemetry (zeros under the contiguous backend) -----
+    cache: str = "contiguous"       # ServeConfig.cache that produced the run
+    num_pages: int = 0              # pool size (0 = not paged)
+    pages_allocated: int = 0        # free-list claims over the whole run
+    pages_freed: int = 0
+    peak_pages_live: int = 0
+    prefix_hits: int = 0            # admissions that reused >= 1 shared page
+    prefix_hit_tokens: int = 0      # prompt tokens never re-prefilled
+    prefill_tokens: int = 0         # prompt tokens actually computed
+    deferred_admissions: int = 0    # refill passes bounced on page pressure
+    # every page-claim ParallelFor's ScheduleStats (the pool free list run
+    # under the admission policy — the paper's FAA counter, per claim)
+    page_alloc_stats: List[ScheduleStats] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def page_alloc_faa_shared(self) -> int:
+        return sum(s.faa_shared for s in self.page_alloc_stats)
+
+    @property
+    def page_alloc_faa_total(self) -> int:
+        return sum(s.faa_total for s in self.page_alloc_stats)
 
     @property
     def tokens_per_s(self) -> float:
@@ -98,4 +123,14 @@ class ServeReport:
             "admission_faa_total": adm.faa_total if adm else 0,
             "admission_steals": self.admission_steals
                                 + (adm.steals if adm else 0),
+            "cache": self.cache,
+            "num_pages": self.num_pages,
+            "pages_allocated": self.pages_allocated,
+            "peak_pages_live": self.peak_pages_live,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "deferred_admissions": self.deferred_admissions,
+            "page_faa_shared": self.page_alloc_faa_shared,
+            "page_faa_total": self.page_alloc_faa_total,
         }

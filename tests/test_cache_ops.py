@@ -1,0 +1,124 @@
+"""Direct unit tests for the serve-cache splice primitives.
+
+``splice_cache`` and ``cache_batch_axes`` carry the whole refill path; the
+serve suites exercise them only through the engine and only with ``row=0``
+and per-row lengths.  These tests pin the two under-covered contracts:
+copying a row *other than 0* out of a batched prefill cache, and the
+``per_row_len=False`` probe where scalar-``len`` leaves are
+batch-independent (axis ``-1``, splice leaves them untouched) — the latter
+used to raise instead of mapping to ``-1``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("qwen2.5-3b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _leaves_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [("/".join(str(getattr(k, "key", k)) for k in path), leaf)
+            for path, leaf in flat]
+
+
+def test_cache_batch_axes_scalar_len_maps_to_minus_one(dense_setup):
+    """per_row_len=False must answer (not raise) for scalar-``len`` leaves:
+    they have no batch axis, so the probe reports -1 and splice_cache skips
+    them."""
+    _, model, _ = dense_setup
+    per_row = model.cache_batch_axes(per_row_len=True)
+    no_row = model.cache_batch_axes(per_row_len=False)
+    assert jax.tree.structure(per_row) == jax.tree.structure(no_row)
+    saw_len = False
+    for (path_a, ax_a), (path_b, ax_b) in zip(
+            _leaves_with_paths(per_row), _leaves_with_paths(no_row)):
+        assert path_a == path_b
+        if path_a.endswith("len"):
+            saw_len = True
+            assert ax_a >= 0       # per-row [B] vector: real batch axis
+            assert ax_b == -1      # scalar form: batch-independent
+        else:
+            assert ax_a == ax_b >= 0   # K/V pools agree in both forms
+    assert saw_len
+
+
+def test_splice_row_beyond_zero(dense_setup):
+    """Splice row 2 of a batch-of-3 prefill cache into slot 1 of a serve
+    cache: every leaf of slot 1 must equal the source's row 2, and a decode
+    step from the spliced slot must be bit-identical to decoding row 2 of
+    the prefill cache directly."""
+    cfg, model, params = dense_setup
+    rng = np.random.RandomState(0)
+    lens = np.asarray([7, 4, 9], np.int32)
+    toks = np.zeros((3, 16), np.int32)
+    for i, l in enumerate(lens):
+        toks[i, :l] = rng.randint(1, cfg.vocab_size, l)
+    _, pcache = model.prefill_padded(
+        params, {"tokens": jnp.asarray(toks),
+                 "lengths": jnp.asarray(lens)}, MAX_LEN)
+
+    axes = model.cache_batch_axes()
+    serve = model.set_cache_lengths(
+        model.init_cache(2, MAX_LEN), np.zeros(2, np.int32))
+    serve = model.splice_cache(serve, pcache, jnp.asarray(1, jnp.int32),
+                               axes=axes, row=2)
+
+    # leaf-level: slot 1 holds exactly the source's row 2
+    for (path, dst), (_, src), (_, ax) in zip(
+            _leaves_with_paths(serve), _leaves_with_paths(pcache),
+            _leaves_with_paths(axes)):
+        got = jnp.take(dst, 1, axis=ax)
+        want = jnp.take(src, 2, axis=ax)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=path)
+
+    # behavioral: one decode step agrees bitwise with the un-spliced source
+    tok = rng.randint(1, cfg.vocab_size, (3, 1)).astype(np.int32)
+    ref_logits, _ = jax.jit(model.decode_step)(
+        params, jnp.asarray(tok), pcache)
+    serve_tok = np.asarray([[1], [int(tok[2, 0])]], np.int32)
+    got_logits, _ = jax.jit(model.decode_step)(
+        params, jnp.asarray(serve_tok), serve)
+    np.testing.assert_array_equal(np.asarray(got_logits[1]),
+                                  np.asarray(ref_logits[2]))
+
+
+def test_splice_scalar_len_leaves_destination_untouched(dense_setup):
+    """With per_row_len=False the ``len`` leaves are scalar-form: splice
+    must copy the K/V rows but keep the destination's own lengths — the
+    batch-independent leaf belongs to the destination, not the source."""
+    cfg, model, params = dense_setup
+    rng = np.random.RandomState(1)
+    toks = rng.randint(1, cfg.vocab_size, (2, 6)).astype(np.int32)
+    _, pcache = model.prefill(params, {"tokens": jnp.asarray(toks)},
+                              MAX_LEN)
+
+    axes = model.cache_batch_axes(per_row_len=False)
+    dst = model.init_cache(3, MAX_LEN)      # scalar len == 0 everywhere
+    out = model.splice_cache(dst, pcache, jnp.asarray(2, jnp.int32),
+                             axes=axes, row=1)
+
+    for (path, got), (_, src), (_, before), (_, ax) in zip(
+            _leaves_with_paths(out), _leaves_with_paths(pcache),
+            _leaves_with_paths(dst), _leaves_with_paths(axes)):
+        if ax < 0:
+            # scalar len: destination value survives the splice
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(before), err_msg=path)
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(jnp.take(got, 2, axis=ax)),
+                np.asarray(jnp.take(src, 1, axis=ax)), err_msg=path)

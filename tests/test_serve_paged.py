@@ -1,0 +1,533 @@
+"""Paged KV cache gate: differential serve harness + allocator properties.
+
+Two layers guard the hottest correctness surface in the repo:
+
+1. A differential harness — the paged engine must produce BIT-identical
+   greedy tokens to the contiguous engine (which is itself gated against
+   per-request ``generate()``) across families, eos early-exit, prefix
+   reuse, page pressure, and every registered admission policy.
+2. A hypothesis property suite over :class:`PageAllocator` /
+   :class:`PrefixCache`: exactly-once page claims, no double-free, no
+   use-after-free, per-policy FAA decomposition of the free-list claim
+   counter, and refcounted shared pages never reclaimed while live.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.paged_cache import PageAllocator, PrefixCache
+from repro.serve.queue import Request
+
+PS = 8  # page size used throughout (divides max_len=48)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("qwen2.5-3b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mixed_prompts(dense_setup):
+    cfg, _, _ = dense_setup
+    rng = np.random.RandomState(0)
+    lens = [8, 8, 5, 8, 5, 11, 3]
+    return [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+            for l in lens]
+
+
+def _serve_pair(model, params, prompts, max_new, *, paged_kw=None, **kw):
+    """Run contiguous and paged engines on identical inputs; return
+    (contiguous outputs, paged outputs, paged engine)."""
+    cont = Engine(model, params, ServeConfig(cache="contiguous", **kw))
+    ref = cont.serve(prompts, max_new)
+    pkw = dict(kw)
+    pkw.update(paged_kw or {})
+    paged = Engine(model, params,
+                   ServeConfig(cache="paged", page_size=PS, **pkw))
+    out = paged.serve(prompts, max_new)
+    return ref, out, paged
+
+
+# ---------------------------------------------------------------------------
+# Differential harness
+# ---------------------------------------------------------------------------
+
+
+def test_paged_bit_identical_dense(dense_setup, mixed_prompts):
+    """Mixed lengths, more requests than slots: every token bitwise equal
+    to the contiguous engine's (itself gated against generate())."""
+    _, model, params = dense_setup
+    ref, out, eng = _serve_pair(model, params, mixed_prompts, 4,
+                                max_len=48, slots=2, refill_schedule="faa",
+                                prefix_cache=False)
+    for i, (a, b) in enumerate(zip(ref, out)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    rep = eng.last_report
+    assert rep.cache == "paged"
+    assert rep.pages_allocated > 0
+    assert rep.pages_freed == rep.pages_allocated  # all released at drain
+    assert rep.peak_pages_live <= rep.num_pages
+
+
+def test_paged_bit_identical_eos_early_exit(dense_setup, mixed_prompts):
+    """Early eos exits free pages mid-serve; tokens stay bit-identical and
+    the freed slot's later (dead) decode writes never corrupt a reused
+    page — that is exactly what would break this assertion."""
+    _, model, params = dense_setup
+    probe_eng = Engine(model, params, ServeConfig(max_len=48, slots=2))
+    probe = probe_eng.generate(
+        {"tokens": np.asarray(mixed_prompts[0])[None, :]}, 4)
+    eos = int(probe[0, 1])
+    ref, out, _ = _serve_pair(model, params, mixed_prompts, 4,
+                              max_len=48, slots=2, refill_schedule="faa",
+                              eos_id=eos)
+    stopped_early = 0
+    for i, (a, b) in enumerate(zip(ref, out)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+        hits = np.nonzero(b == eos)[0]
+        if hits.size and hits[0] < 3:
+            stopped_early += 1
+    assert stopped_early >= 1
+
+
+def test_paged_bit_identical_ssm_exact_length(dense_setup):
+    """SSM: constant-size recurrent state means zero pages — the paged
+    engine must degenerate to per-slot state through the same admission
+    flow, on the exact-length (pad-unsafe) prefill path."""
+    cfg = get_config("mamba2-780m").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+               for l in (6, 6, 9, 4)]
+    ref, out, eng = _serve_pair(model, params, prompts, 4,
+                                max_len=48, slots=2,
+                                refill_schedule="static")
+    for i, (a, b) in enumerate(zip(ref, out)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    assert eng.last_report.pages_allocated == 0
+
+
+def test_paged_bit_identical_hybrid(dense_setup):
+    """Hybrid pages its shared attention leaves while the recurrent state
+    stays per-slot — both layouts inside one cache tree."""
+    cfg = get_config("zamba2-2.7b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+               for l in (6, 9, 4, 7)]
+    ref, out, eng = _serve_pair(model, params, prompts, 4,
+                                max_len=48, slots=2,
+                                refill_schedule="stealing")
+    for i, (a, b) in enumerate(zip(ref, out)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    assert eng.last_report.pages_allocated > 0
+
+
+def test_paged_bit_identical_under_every_policy(dense_setup, mixed_prompts):
+    """The free-list claim counter runs through the scheduler registry;
+    tokens are policy-invariant while the FAA telemetry is policy-shaped
+    (the paper's shared-vs-local split, now on page claims)."""
+    from repro.core.schedulers import available_schedulers
+
+    _, model, params = dense_setup
+    baseline = None
+    shared = {}
+    for policy in available_schedulers():
+        eng = Engine(model, params,
+                     ServeConfig(max_len=48, slots=2, cache="paged",
+                                 page_size=PS, refill_schedule="faa",
+                                 page_alloc_schedule=policy))
+        outs = eng.serve(mixed_prompts, 3)
+        if baseline is None:
+            baseline = outs
+        else:
+            for i, (a, b) in enumerate(zip(baseline, outs)):
+                np.testing.assert_array_equal(a, b,
+                                              err_msg=f"{policy} req {i}")
+        rep = eng.last_report
+        assert rep.page_alloc_stats, policy
+        assert all(s.schedule == policy for s in rep.page_alloc_stats)
+        shared[policy] = rep.page_alloc_faa_shared
+    assert shared["stealing"] == 0      # local queues: no shared counter
+    assert shared["faa"] > 0            # one contended counter
+
+
+def test_prefix_hit_zero_recompute_and_bit_identity(dense_setup):
+    """Requests sharing a system prompt splice in the cached pages: the
+    acceptance criterion's hard assert — a prefix-cache hit performs ZERO
+    prefill recomputation for the shared tokens — plus bit-identity."""
+    _, model, params = dense_setup
+    cfg, _, _ = dense_setup
+    rng = np.random.RandomState(3)
+    sys_prompt = rng.randint(1, cfg.vocab_size, 2 * PS).astype(np.int32)
+    tails = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+             for l in (5, 3, 7, 2)]
+    prompts = [np.concatenate([sys_prompt, t]) for t in tails]
+    ref, out, eng = _serve_pair(model, params, prompts, 4,
+                                max_len=48, slots=2, refill_schedule="faa")
+    for i, (a, b) in enumerate(zip(ref, out)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    rep = eng.last_report
+    # first request is cold; every later one reuses both system-prompt pages
+    assert rep.prefix_hits == len(prompts) - 1
+    assert rep.prefix_hit_tokens == (len(prompts) - 1) * 2 * PS
+    # zero recompute, hard-asserted per request: computed + reused == prompt
+    for t in rep.requests:
+        assert t.prefill_tokens + t.prefix_hit_tokens == t.prompt_len
+        if t.prefix_hit_tokens:
+            assert t.prefill_tokens == t.prompt_len - 2 * PS
+    assert rep.prefill_tokens == sum(len(p) for p in prompts) \
+        - rep.prefix_hit_tokens
+
+
+def test_prefix_cache_survives_request_churn(dense_setup):
+    """The shared pages outlive the request that created them (the cache
+    holds its own refcount) but die with eviction pressure rather than
+    leaking: serve twice and the second run still hits."""
+    _, model, params = dense_setup
+    cfg, _, _ = dense_setup
+    rng = np.random.RandomState(4)
+    sys_prompt = rng.randint(1, cfg.vocab_size, PS).astype(np.int32)
+    prompts = [np.concatenate(
+        [sys_prompt, rng.randint(1, cfg.vocab_size, 3).astype(np.int32)])
+        for _ in range(3)]
+    eng = Engine(model, params,
+                 ServeConfig(max_len=48, slots=2, cache="paged",
+                             page_size=PS, refill_schedule="faa"))
+    eng.serve(prompts, 2)
+    first = eng.last_report.prefix_hits
+    assert first == 2
+    # engine state persists across serve() calls? each serve() builds a
+    # fresh backend — the cache is per-run, so run two batches in one call
+    eng2 = Engine(model, params,
+                  ServeConfig(max_len=48, slots=2, cache="paged",
+                              page_size=PS, refill_schedule="faa"))
+    outs = eng2.serve(prompts + prompts, 2)
+    assert eng2.last_report.prefix_hits == 5
+    ref = Engine(model, params, ServeConfig(max_len=48, slots=2)).serve(
+        prompts + prompts, 2)
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_concurrency_beyond_slot_parity_at_fixed_memory(dense_setup):
+    """The acceptance criterion: at the KV byte budget of TWO contiguous
+    slots (num_pages = 2 * max_len / ps), the paged engine keeps strictly
+    more than two requests in flight simultaneously."""
+    _, model, params = dense_setup
+    cfg, _, _ = dense_setup
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(1, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(8)]
+    budget_pages = 2 * 48 // PS          # two contiguous rows' worth
+    eng = Engine(model, params,
+                 ServeConfig(max_len=48, slots=4, cache="paged",
+                             page_size=PS, num_pages=budget_pages,
+                             prefix_cache=False, refill_schedule="faa"))
+    outs = eng.serve(prompts, 6)          # demand: 2 pages per request
+    ref = Engine(model, params,
+                 ServeConfig(max_len=48, slots=4,
+                             refill_schedule="faa")).serve(prompts, 6)
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a, b)
+    rep = eng.last_report
+    by_tick = [sum(1 for t in rep.requests
+                   if t.admit_tick <= tick < t.finish_tick)
+               for tick in range(rep.total_ticks + 1)]
+    assert max(by_tick) > 2, (
+        f"peak concurrency {max(by_tick)} never beat the 2-slot "
+        f"contiguous budget")
+    assert rep.peak_pages_live <= budget_pages
+
+
+def test_partial_admission_defers_without_deadlock(dense_setup):
+    """When page demand exceeds free pages the request is pushed back and
+    retried after decode frees pages — never dropped, never spinning."""
+    _, model, params = dense_setup
+    cfg, _, _ = dense_setup
+    rng = np.random.RandomState(6)
+    prompts = [rng.randint(1, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(6)]
+    eng = Engine(model, params,
+                 ServeConfig(max_len=48, slots=4, cache="paged",
+                             page_size=PS, num_pages=4,   # 2 requests' worth
+                             prefix_cache=False, refill_schedule="faa"))
+    outs = eng.serve(prompts, 6)
+    ref = Engine(model, params,
+                 ServeConfig(max_len=48, slots=4,
+                             refill_schedule="faa")).serve(prompts, 6)
+    for i, (a, b) in enumerate(zip(ref, outs)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    rep = eng.last_report
+    assert rep.deferred_admissions > 0
+    assert rep.peak_pages_live <= 4
+    assert any(t.deferred_ticks > 0 for t in rep.requests)
+
+
+def test_paged_rejects_unsupported(dense_setup):
+    """MoE/MLA latent caches have no paged path (documented future work);
+    oversized single requests and the rounds barrier fail fast."""
+    _, model, params = dense_setup
+    rng = np.random.RandomState(7)
+    mcfg = get_config("deepseek-v2-lite-16b").reduced()
+    mm = Model(mcfg)
+    mp = mm.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="paged"):
+        Engine(mm, mp, ServeConfig(max_len=48, slots=2, cache="paged",
+                                   page_size=PS)).serve(
+            [rng.randint(1, mcfg.vocab_size, 5).astype(np.int32)], 2)
+    # single request whose page demand exceeds the whole pool
+    eng = Engine(model, params,
+                 ServeConfig(max_len=48, slots=2, cache="paged",
+                             page_size=PS, num_pages=2))
+    with pytest.raises(ValueError, match="pages"):
+        eng.serve([rng.randint(1, 100, 20).astype(np.int32)], 6)
+    # page size must divide max_len
+    with pytest.raises(ValueError, match="multiple"):
+        Engine(model, params,
+               ServeConfig(max_len=48, slots=2, cache="paged",
+                           page_size=7)).serve(
+            [rng.randint(1, 100, 5).astype(np.int32)], 2)
+    with pytest.raises(ValueError, match="continuous"):
+        Engine(model, params,
+               ServeConfig(max_len=48, slots=2, cache="paged",
+                           page_size=PS, mode="rounds")).serve(
+            [rng.randint(1, 100, 5).astype(np.int32)], 2)
+
+
+# ---------------------------------------------------------------------------
+# Allocator property suite (registry-driven)
+#
+# The invariant checkers are shared by two drivers: a deterministic
+# seeded-fuzz sweep that runs everywhere, and a hypothesis version (with
+# shrinking) that runs where hypothesis is installed — same pattern as
+# test_scheduler_properties.py.
+# ---------------------------------------------------------------------------
+
+from repro.core.schedulers import available_schedulers  # noqa: E402
+
+ALL = list(available_schedulers())
+
+
+def _run_interleaved(schedule, ops, pool, slots, block):
+    """Interpret an (kind, salt) op stream against a PageAllocator next to
+    an oracle refcount array; assert the full contract at every step."""
+    alloc = PageAllocator(pool, slots=slots, schedule=schedule,
+                          block_size=block)
+    held = []      # [pages] one entry per live allocation
+    forks = []     # pages with an extra (fork) reference
+    model_ref = np.zeros(pool + 1, np.int64)   # oracle refcounts
+
+    for kind, salt in ops:
+        if kind == "alloc":
+            n = salt % (pool + 2)          # occasionally exceeds the pool
+            before = alloc.free_count
+            got = alloc.try_alloc(n)
+            if n > before:
+                assert got is None         # refused, state unchanged
+                assert alloc.free_count == before
+                continue
+            assert got is not None and len(got) == n
+            assert len(set(got)) == n                  # exactly-once
+            for p in got:
+                assert 1 <= p <= pool                  # never scratch 0
+                assert model_ref[p] == 0               # no use-after-free
+                model_ref[p] = 1
+            if n:
+                held.append(got)
+        elif kind == "free" and held:
+            pages = held.pop(salt % len(held))
+            alloc.free(pages)
+            for p in pages:
+                model_ref[p] -= 1
+        elif kind == "fork" and held:
+            pages = held[salt % len(held)]
+            alloc.share(pages)
+            forks.append(pages)
+            for p in pages:
+                model_ref[p] += 1
+        elif kind == "release_fork" and forks:
+            pages = forks.pop(salt % len(forks))
+            alloc.free(pages)
+            for p in pages:
+                model_ref[p] -= 1
+        # conservation + oracle agreement, every step
+        live = int((model_ref > 0).sum())
+        assert alloc.free_count == pool - live
+        assert alloc.live_count == live
+        np.testing.assert_array_equal(alloc.refcount[1:], model_ref[1:])
+        # a page some holder still references is never on the free list
+        assert not (set(alloc._free) & {p for p in range(1, pool + 1)
+                                        if model_ref[p] > 0})
+
+    # FAA decomposition per policy over every claim batch
+    for stats in alloc.stats:
+        assert stats.schedule == schedule
+        local = stats.faa_per_thread - stats.faa_shared_per_thread
+        assert (local >= 0).all()
+        assert stats.faa_total == stats.faa_shared + int(local.sum())
+        assert sum(sz * cnt for sz, cnt in stats.claim_sizes.items()) \
+            == stats.n
+        assert int(stats.items_per_thread.sum()) == stats.n
+    assert alloc.pages_allocated == sum(s.n for s in alloc.stats)
+
+
+def _run_trie_fuzz(seed, pool):
+    """Trie correctness + leaf-only LRU eviction: a match is always a true
+    page-aligned prefix, shared (live) pages are never evicted, and a full
+    evict() drains exactly the cache-owned pages."""
+    rng = np.random.RandomState(seed)
+    alloc = PageAllocator(pool, slots=2, schedule="faa")
+    cache = PrefixCache(alloc, page_size=4)
+    prompts = []
+    for _ in range(rng.randint(1, 6)):
+        plen = rng.randint(1, 3 * 4 + 2)
+        prompt = rng.randint(0, 5, plen).astype(np.int32)
+        need = -(-plen // 4)
+        if need > alloc.free_count:
+            cache.evict(need - alloc.free_count)
+        got = alloc.try_alloc(need)
+        if got is None:
+            continue
+        matched = cache.match(prompt)
+        # a match replays an inserted page-aligned prefix, never more than
+        # (plen - 1) // ps pages
+        assert len(matched) <= (plen - 1) // 4
+        cache.insert(prompt, got)
+        prompts.append(prompt)
+        alloc.free(got)      # request finishes; cache refs keep pages
+    if cache.evictions == 0:
+        # nothing was reclaimed: every inserted prompt must replay its
+        # maximal usable prefix — min(fully-covered, all-but-last-token)
+        for p in prompts:
+            want = min(len(p) // 4, (len(p) - 1) // 4)
+            assert len(cache.match(p)) == want
+    # live pages now belong to the cache alone: evict everything
+    live_before = alloc.live_count
+    freed = cache.evict(pool)
+    assert freed == live_before
+    assert alloc.free_count == pool
+    assert len(cache) == 0
+
+
+_KINDS = ["alloc", "alloc", "free", "fork", "release_fork"]
+
+
+@pytest.mark.parametrize("schedule", ALL)
+def test_allocator_interleaved_ops_invariants(schedule):
+    """Deterministic seeded fuzz over interleaved alloc/free/fork
+    (prefix-share) sequences: exactly-once claims, conservation, no
+    use-after-free, shared pages never reclaimed while a holder lives,
+    and the claim loop's FAA telemetry obeys the scheduler contracts."""
+    rng = np.random.RandomState(0xC0FFEE)
+    for _ in range(8):
+        pool = int(rng.randint(1, 25))
+        slots = int(rng.randint(1, 7))
+        block = None if rng.rand() < 0.5 else int(rng.randint(1, 9))
+        ops = [(_KINDS[rng.randint(len(_KINDS))],
+                int(rng.randint(0, 10 ** 6)))
+               for _ in range(rng.randint(1, 41))]
+        _run_interleaved(schedule, ops, pool, slots, block)
+
+
+@pytest.mark.parametrize("schedule", ALL)
+def test_allocator_double_free_and_uaf_raise(schedule):
+    alloc = PageAllocator(8, slots=2, schedule=schedule)
+    pages = alloc.alloc(3)
+    alloc.free(pages)
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.free([pages[0]])
+    with pytest.raises(RuntimeError, match="use-after-free"):
+        alloc.share([pages[0]])
+    with pytest.raises(ValueError, match="scratch"):
+        alloc.free([0])
+    with pytest.raises(ValueError, match="out of range"):
+        alloc.share([9])
+
+
+@pytest.mark.parametrize("schedule", ALL)
+def test_shared_pages_survive_any_single_free(schedule):
+    """The refcount contract behind prefix reuse: after k holders fork an
+    allocation, any k frees keep the pages live; the (k+1)-th releases."""
+    pool, nshare = 8, 3
+    alloc = PageAllocator(pool, slots=2, schedule=schedule)
+    pages = alloc.alloc(2)
+    for _ in range(nshare):
+        alloc.share(pages)
+    for i in range(nshare):
+        alloc.free(pages)
+        assert alloc.free_count == pool - 2      # still live
+        assert all(alloc.refcount[p] == nshare - i for p in pages)
+    alloc.free(pages)
+    assert alloc.free_count == pool
+    assert all(alloc.refcount[p] == 0 for p in pages)
+
+
+def test_prefix_cache_trie_and_eviction_fuzz():
+    for seed in range(12):
+        _run_trie_fuzz(seed, pool=int(6 + 2 * seed))
+
+
+def test_prefix_cache_never_evicts_shared_page():
+    """A page a live request shares (refcount > 1) must survive eviction
+    pressure — reclaiming it would corrupt an in-flight sequence."""
+    alloc = PageAllocator(4, slots=1, schedule="faa")
+    cache = PrefixCache(alloc, page_size=2)
+    prompt = np.asarray([1, 2, 3, 4], np.int32)
+    pages = alloc.alloc(2)
+    cache.insert(prompt, pages)          # cache refs both pages
+    # a second request maps the shared prefix (both fully-covered pages)
+    matched = cache.match(np.asarray([1, 2, 3, 4, 5], np.int32))
+    assert matched == pages
+    alloc.share(matched)                 # the live request's references
+    alloc.free(pages)                    # original owner finished
+    freed = cache.evict(4)
+    assert freed == 0                    # every cached page is shared
+    assert all(alloc.refcount[p] == 2 for p in pages)  # cache + request
+    alloc.free(matched)                  # request done; now evictable
+    assert cache.evict(4) == 2
+    assert alloc.free_count == 4
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis layer: the same contracts with generated op streams and
+# shrinking, where hypothesis is available (profiles in conftest.py).
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:            # container without hypothesis: fuzz-only
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    any_schedule = st.sampled_from(ALL)
+    # an op stream: (kind, salt) pairs; salts index into live state modulo
+    # its size so shrinking stays meaningful
+    _ops = st.lists(
+        st.tuples(st.sampled_from(_KINDS), st.integers(0, 10 ** 6)),
+        min_size=1, max_size=40)
+
+    @settings(max_examples=25, deadline=None)
+    @given(schedule=any_schedule, ops=_ops, pool=st.integers(1, 24),
+           slots=st.integers(1, 6),
+           block=st.one_of(st.none(), st.integers(1, 8)))
+    def test_allocator_ops_invariants_hypothesis(schedule, ops, pool,
+                                                 slots, block):
+        _run_interleaved(schedule, ops, pool, slots, block)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6), pool=st.integers(6, 30))
+    def test_prefix_cache_trie_properties_hypothesis(seed, pool):
+        _run_trie_fuzz(seed, pool)

@@ -1,17 +1,30 @@
-"""Measured-vs-analytic latency sweep for the four Pallas kernels.
+"""Measured-vs-analytic latency sweep for the Pallas kernels.
 
 One row per (kernel, shape-bucket) comparing the analytic cost model's
-block/split/tile/chunk pick against the empirically searched winner
-(:mod:`repro.core.autotune_search`), with the tentpole invariants hard
-asserted:
+block/split/tile/chunk/staging-depth pick against the empirically
+searched winner (:mod:`repro.core.autotune_search`), with the invariants
+hard asserted:
 
 * **tuned <= analytic** on every kernel (within noise tolerance when the
   two configs are re-timed independently) — the measured search never
   regresses the model's pick, because the analytic pick is always in the
-  measured candidate set;
+  measured candidate set.  In particular a **pipelined winner**
+  (``num_buffers`` > 1) must have beaten the single-buffered analytic
+  pick's recorded median outright;
+* **depth is on the menu** — every attention kernel's candidate set
+  includes at least one ``num_buffers`` > 1 config, so the search
+  actually weighs DMA/compute overlap instead of silently dropping it;
 * **warm lookups are free** — after the search, re-resolving every
   kernel's config from the tuning db performs zero timed measurements
   (checked against the process-wide measurement counter).
+
+Attention kernels additionally emit a ``kernel_dma_breakdown`` table:
+one row per timed candidate with its measured median next to the modeled
+staged-copy time (``dma_ms``), compute time (``compute_ms``) and exposed
+DMA wait (``stall_ms`` — the stream's excess over compute divided by the
+ring depth).  The stall column is *why* a depth wins: deeper rings shrink
+it, which is the same per-chunk-overhead amortization the paper's FAA
+analysis applies to the dispatch counter.
 
     PYTHONPATH=src python -m benchmarks.kernel_autotune_sweep            # full
     PYTHONPATH=src python -m benchmarks.kernel_autotune_sweep --dry-run  # CI
@@ -30,9 +43,14 @@ import sys
 
 from repro.core import autotune_search
 from repro.core.autotune_search import SearchOptions, TuningDB
+from repro.core.autotune_search.kernels import dma_compute_breakdown
 from repro.core.autotune_search.search import time_runner
 
 TABLE = "kernel_autotune"
+BREAKDOWN_TABLE = "kernel_dma_breakdown"
+# kernels with a staged KV stream: candidate sets must offer depth > 1
+ATTENTION_KERNELS = ("flash_attention", "decode_attention",
+                     "paged_decode_attention")
 # re-timing the same config on a busy host jitters; the invariant is
 # "tuned is not slower than analytic", asserted with this slack
 NOISE_TOLERANCE = 1.25
@@ -88,6 +106,22 @@ def _sweep_rows(*, quick: bool, remeasure: bool) -> list[dict]:
                 f"slower than the analytic {res.analytic_config} @ "
                 f"{analytic_s * 1e3:.2f}ms — the measured search regressed "
                 f"the model's pick")
+            if kernel in ATTENTION_KERNELS:
+                cands = spec.candidates(spec.bucket(**shape))
+                assert any(c.get("num_buffers", 1) > 1 for c in cands), (
+                    f"{kernel}: candidate set has no num_buffers > 1 "
+                    f"config — the search is not weighing DMA/compute "
+                    f"overlap")
+                if res.config.get("num_buffers", 1) > 1:
+                    # a pipelined winner must have beaten the
+                    # single-buffered analytic pick outright (recorded
+                    # medians from the same search — no re-time jitter)
+                    assert res.measured_s <= res.analytic_s, (
+                        f"{kernel}: pipelined winner {res.config} @ "
+                        f"{res.measured_s * 1e3:.2f}ms did not beat the "
+                        f"single-buffered analytic pick "
+                        f"{res.analytic_config} @ "
+                        f"{res.analytic_s * 1e3:.2f}ms")
 
             # steady state: the warm db must resolve with zero measurements
             before = autotune_search.measurement_count()
@@ -112,6 +146,27 @@ def _sweep_rows(*, quick: bool, remeasure: bool) -> list[dict]:
                 "n_timed": res.n_timed,
                 "candidates_tried": len(res.trials),
             })
+
+            # DMA-vs-compute breakdown: one row per timed candidate,
+            # measured median next to the modeled staged-copy / compute /
+            # exposed-stall split — the column that shows WHY a staging
+            # depth wins (deeper ring -> smaller exposed stall)
+            for trial in res.trials:
+                bd = dma_compute_breakdown(kernel, shape, trial.config)
+                if bd is None:
+                    continue
+                rows.append({
+                    "table": BREAKDOWN_TABLE,
+                    "kernel": kernel,
+                    "bucket": res.bucket,
+                    "config": _fmt(trial.config),
+                    "num_buffers": trial.config.get("num_buffers", 1),
+                    "measured_ms": round(trial.median_s * 1e3, 3),
+                    "dma_ms": round(bd["dma_s"] * 1e3, 6),
+                    "compute_ms": round(bd["compute_s"] * 1e3, 6),
+                    "stall_ms": round(bd["stall_s"] * 1e3, 6),
+                    "winner": trial.config == res.config,
+                })
     return rows
 
 
@@ -137,12 +192,20 @@ def main() -> None:
     args = ap.parse_args()
     rows = (kernel_autotune_table_quick() if args.dry_run
             else kernel_autotune_table())
-    keys = sorted({k for r in rows for k in r})
-    print(",".join(keys))
-    for r in rows:
-        print(",".join(str(r.get(k, "")) for k in keys))
-    print(f"# {len(rows)} buckets; tuned <= analytic and warm lookups did "
-          f"zero measurements on every kernel", file=sys.stderr)
+    for table in (TABLE, BREAKDOWN_TABLE):
+        sub = [r for r in rows if r["table"] == table]
+        if not sub:
+            continue
+        keys = sorted({k for r in sub for k in r})
+        print(",".join(keys))
+        for r in sub:
+            print(",".join(str(r.get(k, "")) for k in keys))
+    n_buckets = sum(r["table"] == TABLE for r in rows)
+    n_bd = sum(r["table"] == BREAKDOWN_TABLE for r in rows)
+    print(f"# {n_buckets} buckets (+{n_bd} DMA-breakdown rows); tuned <= "
+          f"analytic, pipelined winners beat the single-buffered pick, and "
+          f"warm lookups did zero measurements on every kernel",
+          file=sys.stderr)
 
 
 if __name__ == "__main__":

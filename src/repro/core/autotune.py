@@ -110,11 +110,30 @@ def choose_block(
     return int(cands[int(np.argmin(costs))])
 
 
+def fit_buffer_depth(
+    depth: int,
+    block_bytes: int,
+    *,
+    vmem_limit: Optional[int] = None,
+    base_bytes: int = 0,
+) -> int:
+    """Largest staging-ring depth <= ``depth`` whose resident bytes
+    (``base_bytes + depth * block_bytes``) fit the VMEM budget — the
+    single-buffer fallback of the pipelined kernels: depth halves until it
+    fits, bottoming out at 1 (the classic, non-pipelined path)."""
+    limit = VMEM_BUDGET if vmem_limit is None else int(vmem_limit)
+    d = max(1, int(depth))
+    while d > 1 and base_bytes + d * block_bytes > limit:
+        d //= 2
+    return d
+
+
 @dataclasses.dataclass(frozen=True)
 class AttentionBlocks:
     block_q: int
     block_k: int
     vmem_bytes: int
+    num_buffers: int = 1
 
 
 def attention_block_candidates(
@@ -127,6 +146,7 @@ def attention_block_candidates(
     vmem_budget: int = VMEM_BUDGET,
     overhead: Optional[float] = None,
     align: int = MXU,
+    buffer_depths: Sequence[int] = (1,),
 ) -> list[AttentionBlocks]:
     """VMEM-feasible (block_q, block_k) candidates ranked by the analytic
     cost, best first — the prior-generation layer for the measured search
@@ -143,26 +163,45 @@ def attention_block_candidates(
     (the measured search passes the calibrated ``TuningContext`` value);
     ``align`` relaxes the MXU alignment for backends without a systolic
     array (CPU interpret mode).
+
+    ``buffer_depths`` sweeps the pipelined kernel's KV staging-ring depth
+    jointly with the blocks.  Depth scales the resident KV bytes (each
+    ring slot holds one k block + one v block), so deeper rings shrink the
+    feasible block space.  Depth 1 is the classic grid kernel: its cost is
+    the unchanged ``steps * (max(t, m) + L)``.  Depth D >= 2 runs the KV
+    loop inside one grid step per q block, so the per-KV-block dispatch
+    overhead L (the paper's per-claim FAA analogue) collapses to one
+    payment per q block plus an ``L/D`` semaphore-amortized residual per
+    KV block.
     """
     overhead_s = topo.chunk_overhead_s if overhead is None else overhead
     scored = []
     per_step_flops = lambda bq, bk: 4.0 * bq * bk * head_dim  # qk^T + pv
     for bq in _aligned_candidates(min(seq_q, 1024), align):
         for bk in _aligned_candidates(min(seq_k, 2048), align):
-            vmem = dtype_bytes * (
-                bq * head_dim + 2 * bk * head_dim + bq * head_dim
-            ) + 4 * (bq * bk + 2 * bq)  # f32 scores + m/l stats
-            if vmem > vmem_budget:
-                continue
-            steps = max(1, seq_q // bq) * max(1, seq_k // bk)
-            t_step = per_step_flops(bq, bk) / topo.peak_flops
-            # memory per step: stream k,v once per q block
-            m_step = dtype_bytes * 2 * bk * head_dim / topo.hbm_bw
-            cost = cm.analytic_cost(
-                steps, 1.0, overhead_s, max(t_step, m_step), 1,
-                quota=0.0,
-            )
-            scored.append((cost, AttentionBlocks(bq, bk, vmem)))
+            for depth in sorted(set(max(1, int(nb)) for nb in buffer_depths)):
+                # base: q + o (input dtype), f32 scores + m/l stats; the
+                # staged KV ring holds ``depth`` (k, v) block pairs
+                base = dtype_bytes * 2 * bq * head_dim \
+                    + 4 * (bq * bk + 2 * bq)
+                staged = depth * dtype_bytes * 2 * bk * head_dim
+                vmem = base + staged
+                if vmem > vmem_budget:
+                    continue
+                steps = max(1, seq_q // bq) * max(1, seq_k // bk)
+                t_step = per_step_flops(bq, bk) / topo.peak_flops
+                # memory per step: stream k,v once per q block
+                m_step = dtype_bytes * 2 * bk * head_dim / topo.hbm_bw
+                if depth == 1:
+                    cost = cm.analytic_cost(
+                        steps, 1.0, overhead_s, max(t_step, m_step), 1,
+                        quota=0.0,
+                    )
+                else:
+                    q_steps = max(1, seq_q // bq)
+                    cost = q_steps * overhead_s + steps * (
+                        max(t_step, m_step) + overhead_s / depth)
+                scored.append((cost, AttentionBlocks(bq, bk, vmem, depth)))
     assert scored
     scored.sort(key=lambda s: s[0])
     return [blocks for _, blocks in scored]
@@ -192,6 +231,8 @@ def decode_split_candidates(
     head_dim: int = 128,
     dtype_bytes: int = 2,
     min_rows_per_split: int = 128,
+    num_buffers: int = 1,
+    vmem_budget: int = VMEM_BUDGET,
 ) -> list[int]:
     """Split counts ranked by the analytic cost, best first.
 
@@ -199,16 +240,73 @@ def decode_split_candidates(
     pays a combine cost (partial-softmax merge) = the FAA-analogue L.
     ``min_rows_per_split`` bounds how fine a split may shred the KV
     stream (relaxed by the measured search on small shapes).
+
+    ``num_buffers`` adds the pipelined kernel's VMEM feasibility: a depth-D
+    staging ring must hold D (k, v) split pairs, so coarse splits that
+    would blow the budget at this depth are dropped (the split count of 1
+    is re-admitted if nothing survives — the caller's depth fallback is
+    :func:`fit_buffer_depth`).
     """
     bytes_per_row = 2 * head_dim * dtype_bytes
     t_row = bytes_per_row / topo.hbm_bw
     cap = max(1, seq_len // max(1, min_rows_per_split))  # always admits 1
     candidates = [s for s in (1, 2, 4, 8, 16, 32, 64) if s <= cap]
+    if num_buffers > 1:
+        feasible = [
+            s for s in candidates
+            if num_buffers * max(1, seq_len // s) * bytes_per_row
+            <= vmem_budget
+        ]
+        candidates = feasible or candidates[:1]
     scored = sorted(
         (combine_overhead * s + (seq_len * t_row) / min(s, lanes), s)
         for s in candidates
     )
     return [s for _, s in scored]
+
+
+def decode_split_buffer_candidates(
+    seq_len: int,
+    *,
+    lanes: int = 8,
+    combine_overhead: float = 0.8e-6,
+    topo: TpuTopology = V5E_POD,
+    head_dim: int = 128,
+    dtype_bytes: int = 2,
+    min_rows_per_split: int = 128,
+    buffer_depths: Sequence[int] = (1, 2, 4),
+    vmem_budget: int = VMEM_BUDGET,
+) -> list[tuple[int, int]]:
+    """(num_splits, num_buffers) pairs ranked by the analytic cost, best
+    first — the joint prior for the pipelined flash-decode search.
+
+    Depth 1 is the classic split-parallel kernel: splits spread over
+    ``lanes`` and each pays the combine cost L.  Depth D >= 2 is the
+    pipelined kernel: splits run *sequentially* inside one grid step with
+    the next split's KV fetch in flight, so the stream is paid once
+    (unscaled by lanes) but the per-split issue overhead amortizes to
+    ``L/D``.  VMEM feasibility: the ring holds ``depth`` (k, v) split
+    pairs of ``seq_len/splits`` rows each.
+    """
+    bytes_per_row = 2 * head_dim * dtype_bytes
+    t_row = bytes_per_row / topo.hbm_bw
+    cap = max(1, seq_len // max(1, min_rows_per_split))  # always admits 1
+    scored = []
+    for s in (1, 2, 4, 8, 16, 32, 64):
+        if s > cap:
+            continue
+        split_rows = max(1, seq_len // s)
+        for depth in sorted(set(max(1, int(nb)) for nb in buffer_depths)):
+            if depth > 1 and depth * split_rows * bytes_per_row > vmem_budget:
+                continue
+            if depth == 1:
+                cost = combine_overhead * s \
+                    + (seq_len * t_row) / min(s, lanes)
+            else:
+                cost = combine_overhead * s / depth + seq_len * t_row
+            scored.append((cost, (s, depth)))
+    scored.sort(key=lambda x: x[0])
+    return [pair for _, pair in scored]
 
 
 def decode_split_k(

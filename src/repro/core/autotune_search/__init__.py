@@ -1,4 +1,4 @@
-"""Empirical block-size autotuner for the four Pallas kernels.
+"""Empirical block-size autotuner for the Pallas kernels.
 
 The paper's discipline, applied to the device knobs: the analytic cost
 model ``Cost(T,N,L)`` is a *prior* — it prunes the candidate space — and
@@ -7,7 +7,8 @@ platform has confirmed it (Schweizer et al. measure integer-factor
 divergence between modeled and measured overheads across machines).  PR 3
 closed that loop for the host-side layers via ``results/calibration.json``;
 this package closes it for ``flash_attention``, ``decode_attention``,
-``moe_gmm`` and ``mamba_ssd``, whose ``(block_q, block_k)`` / ``split_k``
+``paged_decode_attention``, ``moe_gmm`` and ``mamba_ssd``, whose
+``(block_q, block_k)`` / ``split_k`` / KV staging depth (``num_buffers``)
 / tile / ``chunk`` choices previously came straight from ``autotune.py``'s
 closed form.
 

@@ -23,7 +23,10 @@ from repro.core.runtime.artifacts import load_artifact, save_artifact
 __all__ = ["TUNING_DB_KIND", "TUNING_DB_VERSION", "TuningDB"]
 
 TUNING_DB_KIND = "tuning_db"
-TUNING_DB_VERSION = 1
+# v2: configs gained ``num_buffers`` (KV staging-ring depth) and the
+# ``paged_decode_attention`` bucket schema carries ``page_size``.  The
+# artifact envelope invalidates v1 dbs on load (empty db, re-search).
+TUNING_DB_VERSION = 2
 
 
 @contextlib.contextmanager

@@ -1,4 +1,4 @@
-"""KernelSpecs: how each of the four Pallas kernels plugs into the search.
+"""KernelSpecs: how each of the Pallas kernels plugs into the search.
 
 A spec answers four questions:
 
@@ -36,8 +36,9 @@ import jax.numpy as jnp
 
 from repro.core import autotune
 
-__all__ = ["KernelSpec", "QUICK_SHAPES", "REPRESENTATIVE_SHAPES", "SPECS",
-           "backend_name", "fmt_items"]
+__all__ = ["BUFFER_DEPTHS", "KernelSpec", "QUICK_SHAPES",
+           "REPRESENTATIVE_SHAPES", "SPECS", "backend_name",
+           "dma_compute_breakdown", "fmt_items"]
 
 
 def backend_name() -> str:
@@ -133,31 +134,40 @@ def _dtype_bytes(shape: dict) -> int:
     return max(1, jnp.dtype(shape.get("dtype", "float32")).itemsize)
 
 
+BUFFER_DEPTHS = (1, 2, 4)   # KV staging-ring depths the search sweeps
+
+
 def _flash_candidates(shape: dict) -> list[dict]:
     align = 128 if _on_tpu() else 8
     blocks = autotune.attention_block_candidates(
         shape["sq"], shape["skv"], shape["d"],
         dtype_bytes=_dtype_bytes(shape), overhead=_overhead_s(),
-        align=align)
+        align=align, buffer_depths=BUFFER_DEPTHS)
     classic = _flash_analytic(shape)
     return _with_classic(
         _dedupe([
             {"block_q": autotune.fit_block(shape["sq"], b.block_q),
-             "block_k": autotune.fit_block(shape["skv"], b.block_k)}
+             "block_k": autotune.fit_block(shape["skv"], b.block_k),
+             "num_buffers": b.num_buffers}
             for b in blocks
         ]),
         {"block_q": autotune.fit_block(shape["sq"], classic["block_q"]),
-         "block_k": autotune.fit_block(shape["skv"], classic["block_k"])})
+         "block_k": autotune.fit_block(shape["skv"], classic["block_k"]),
+         "num_buffers": 1})
 
 
 def _flash_analytic(shape: dict) -> dict:
+    # depth 1 = the classic kernel: the off-mode/cache-miss fallback stays
+    # exactly the pre-search op (hermetic — see KernelSpec.analytic_config)
     blocks = autotune.attention_block_sizes(
         shape["sq"], shape["skv"], shape["d"])
-    return {"block_q": blocks.block_q, "block_k": blocks.block_k}
+    return {"block_q": blocks.block_q, "block_k": blocks.block_k,
+            "num_buffers": 1}
 
 
 def _flash_runner_factory(shape: dict):
-    from repro.kernels.flash_attention.kernel import flash_attention_fwd
+    from repro.kernels.flash_attention.kernel import (
+        flash_attention_fwd, flash_attention_fwd_pipelined)
 
     dtype = jnp.dtype(shape["dtype"])
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
@@ -167,10 +177,17 @@ def _flash_runner_factory(shape: dict):
     interpret = not _on_tpu()
 
     def make(config: dict) -> Callable[[], None]:
-        fn = jax.jit(functools.partial(
-            flash_attention_fwd, causal=bool(shape["causal"]),
-            block_q=config["block_q"], block_k=config["block_k"],
-            interpret=interpret))
+        nb = int(config.get("num_buffers", 1))
+        if nb > 1:
+            fn = jax.jit(functools.partial(
+                flash_attention_fwd_pipelined, causal=bool(shape["causal"]),
+                block_q=config["block_q"], block_k=config["block_k"],
+                num_buffers=nb, interpret=interpret))
+        else:
+            fn = jax.jit(functools.partial(
+                flash_attention_fwd, causal=bool(shape["causal"]),
+                block_q=config["block_q"], block_k=config["block_k"],
+                interpret=interpret))
 
         def run() -> None:
             jax.block_until_ready(fn(q, k, v))
@@ -190,24 +207,28 @@ def _decode_bucket(*, s: int, d: int, dtype: str = "float32") -> dict:
 
 def _decode_candidates(shape: dict) -> list[dict]:
     min_rows = 128 if _on_tpu() else 16
-    splits = autotune.decode_split_candidates(
+    pairs = autotune.decode_split_buffer_candidates(
         shape["s"], head_dim=shape["d"], dtype_bytes=_dtype_bytes(shape),
-        combine_overhead=_overhead_s(), min_rows_per_split=min_rows)
+        combine_overhead=_overhead_s(), min_rows_per_split=min_rows,
+        buffer_depths=BUFFER_DEPTHS)
     classic = _decode_analytic(shape)
     return _with_classic(
-        _dedupe([{"num_splits": autotune.fit_block(shape["s"], ns)}
-                 for ns in splits]),
+        _dedupe([{"num_splits": autotune.fit_block(shape["s"], ns),
+                  "num_buffers": nb}
+                 for ns, nb in pairs]),
         {"num_splits": autotune.fit_block(shape["s"],
-                                          classic["num_splits"])})
+                                          classic["num_splits"]),
+         "num_buffers": 1})
 
 
 def _decode_analytic(shape: dict) -> dict:
     return {"num_splits": autotune.decode_split_k(
-        shape["s"], head_dim=shape["d"])}
+        shape["s"], head_dim=shape["d"]), "num_buffers": 1}
 
 
 def _decode_runner_factory(shape: dict):
-    from repro.kernels.decode_attention.kernel import decode_attention_fwd
+    from repro.kernels.decode_attention.kernel import (
+        decode_attention_fwd, decode_attention_fwd_pipelined)
 
     dtype = jnp.dtype(shape["dtype"])
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
@@ -218,12 +239,80 @@ def _decode_runner_factory(shape: dict):
     interpret = not _on_tpu()
 
     def make(config: dict) -> Callable[[], None]:
-        fn = jax.jit(functools.partial(
-            decode_attention_fwd, num_splits=config["num_splits"],
-            interpret=interpret))
+        nb = int(config.get("num_buffers", 1))
+        if nb > 1:
+            fn = jax.jit(functools.partial(
+                decode_attention_fwd_pipelined,
+                num_splits=config["num_splits"], num_buffers=nb,
+                interpret=interpret))
+        else:
+            fn = jax.jit(functools.partial(
+                decode_attention_fwd, num_splits=config["num_splits"],
+                interpret=interpret))
 
         def run() -> None:
             jax.block_until_ready(fn(q, k, v, kv_len))
+
+        return run
+
+    return make
+
+
+# ---------------------------------------------------------------------------
+# paged_decode_attention: num_buffers (the page is the fixed DMA block)
+# ---------------------------------------------------------------------------
+
+def _paged_decode_bucket(*, s: int, page_size: int, d: int,
+                         dtype: str = "float32") -> dict:
+    # page_size is IN the bucket: the page is the kernel's DMA block, so
+    # two pools with equal total rows but different page sizes are
+    # different kernels — a bucket without it aliases their winners
+    return {"s": _pow2_bucket(s), "page_size": int(page_size),
+            "d": int(d), "dtype": str(dtype)}
+
+
+def _paged_decode_candidates(shape: dict) -> list[dict]:
+    page_bytes = 2 * shape["page_size"] * shape["d"] * _dtype_bytes(shape)
+    depths = [nb for nb in BUFFER_DEPTHS
+              if autotune.fit_buffer_depth(nb, page_bytes) == nb]
+    classic = _paged_decode_analytic(shape)
+    return _with_classic(
+        _dedupe([{"num_buffers": nb} for nb in depths]), classic)
+
+
+def _paged_decode_analytic(shape: dict) -> dict:
+    # the classic paged kernel: one grid step per page, depth fixed at 1
+    return {"num_buffers": 1}
+
+
+def _paged_decode_runner_factory(shape: dict):
+    from repro.kernels.decode_attention.kernel import (
+        paged_decode_attention_fwd, paged_decode_attention_fwd_pipelined)
+
+    dtype = jnp.dtype(shape["dtype"])
+    ps = shape["page_size"]
+    pages = max(1, shape["s"] // ps)
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (1, 1, shape["d"]), dtype)
+    k_pool = jax.random.normal(ks[1], (pages + 1, ps, 1, shape["d"]), dtype)
+    v_pool = jax.random.normal(ks[2], (pages + 1, ps, 1, shape["d"]), dtype)
+    # pool row 0 is the serve engine's scratch page — never referenced
+    page_table = jnp.arange(1, pages + 1, dtype=jnp.int32)[None, :]
+    kv_len = jnp.full((1,), pages * ps, jnp.int32)
+    interpret = not _on_tpu()
+
+    def make(config: dict) -> Callable[[], None]:
+        nb = int(config.get("num_buffers", 1))
+        if nb > 1:
+            fn = jax.jit(functools.partial(
+                paged_decode_attention_fwd_pipelined, num_buffers=nb,
+                interpret=interpret))
+        else:
+            fn = jax.jit(functools.partial(
+                paged_decode_attention_fwd, interpret=interpret))
+
+        def run() -> None:
+            jax.block_until_ready(fn(q, k_pool, v_pool, page_table, kv_len))
 
         return run
 
@@ -337,6 +426,44 @@ def _ssd_runner_factory(shape: dict):
 
 
 # ---------------------------------------------------------------------------
+# DMA-vs-compute breakdown (attention kernels)
+# ---------------------------------------------------------------------------
+
+def dma_compute_breakdown(kernel: str, shape: dict,
+                          config: dict) -> Optional[dict]:
+    """Modeled staged-copy vs kernel-compute seconds for one candidate of
+    an attention kernel — the column that shows *why* a staging depth wins.
+
+    ``dma_s`` is the total KV bytes over HBM bandwidth, ``compute_s`` the
+    total matmul flops over peak; ``stall_s`` is the modeled *exposed* DMA
+    wait — the stream's excess over compute divided by the ring depth
+    (depth 1 = the classic kernel's implicit double buffer).  Returns None
+    for kernels without a staged KV stream (gmm, ssd).
+    """
+    topo = autotune.V5E_POD
+    dtype_bytes = _dtype_bytes(shape)
+    nb = max(1, int(config.get("num_buffers", 1)))
+    if kernel == "flash_attention":
+        bq = autotune.fit_block(shape["sq"], config["block_q"])
+        bk = autotune.fit_block(shape["skv"], config["block_k"])
+        steps = max(1, shape["sq"] // bq) * max(1, shape["skv"] // bk)
+        compute_s = steps * 4.0 * bq * bk * shape["d"] / topo.peak_flops
+        dma_s = steps * 2.0 * bk * shape["d"] * dtype_bytes / topo.hbm_bw
+    elif kernel == "decode_attention":
+        rows = shape["s"]
+        compute_s = 4.0 * rows * shape["d"] / topo.peak_flops
+        dma_s = 2.0 * rows * shape["d"] * dtype_bytes / topo.hbm_bw
+    elif kernel == "paged_decode_attention":
+        rows = shape["s"]
+        compute_s = 4.0 * rows * shape["d"] / topo.peak_flops
+        dma_s = 2.0 * rows * shape["d"] * dtype_bytes / topo.hbm_bw
+    else:
+        return None
+    stall_s = max(0.0, dma_s - compute_s) / nb
+    return {"dma_s": dma_s, "compute_s": compute_s, "stall_s": stall_s}
+
+
+# ---------------------------------------------------------------------------
 # registry + CLI/benchmark shape sets
 # ---------------------------------------------------------------------------
 
@@ -347,6 +474,10 @@ SPECS: dict[str, KernelSpec] = {
     "decode_attention": KernelSpec(
         "decode_attention", _decode_bucket, _decode_candidates,
         _decode_runner_factory, _decode_analytic),
+    "paged_decode_attention": KernelSpec(
+        "paged_decode_attention", _paged_decode_bucket,
+        _paged_decode_candidates, _paged_decode_runner_factory,
+        _paged_decode_analytic),
     "moe_gmm": KernelSpec(
         "moe_gmm", _gmm_bucket, _gmm_candidates, _gmm_runner_factory,
         _gmm_analytic),
@@ -359,6 +490,7 @@ SPECS: dict[str, KernelSpec] = {
 REPRESENTATIVE_SHAPES: dict[str, list[dict]] = {
     "flash_attention": [dict(sq=256, skv=256, d=32)],
     "decode_attention": [dict(s=512, d=32)],
+    "paged_decode_attention": [dict(s=512, page_size=64, d=32)],
     "moe_gmm": [dict(c=128, d=128, f=128)],
     "mamba_ssd": [dict(s=256, p=32, n=32)],
 }
@@ -366,6 +498,7 @@ REPRESENTATIVE_SHAPES: dict[str, list[dict]] = {
 QUICK_SHAPES: dict[str, list[dict]] = {
     "flash_attention": [dict(sq=64, skv=64, d=16)],
     "decode_attention": [dict(s=128, d=16)],
+    "paged_decode_attention": [dict(s=128, page_size=32, d=16)],
     "moe_gmm": [dict(c=64, d=64, f=64)],
     "mamba_ssd": [dict(s=64, p=16, n=16)],
 }

@@ -123,6 +123,156 @@ def decode_attention_fwd(
 
 
 # ---------------------------------------------------------------------------
+# Multi-buffered variant: explicit DMA/compute pipelining over the splits.
+#
+# The split-K kernel above parallelizes splits across the grid; this one
+# walks them sequentially inside one grid step (B, Hkv) and overlaps the
+# split j+depth-1 KV fetch with compute on split j through a
+# ``num_buffers``-deep VMEM ring.  It writes the SAME per-split partials
+# (o, m, l) as the classic kernel — the external partial-softmax combine is
+# shared verbatim — so the final output is bit-identical.
+# ---------------------------------------------------------------------------
+
+
+def _decode_pipelined_kernel(kv_len_ref, q_ref, k_hbm, v_hbm,
+                             o_ref, m_ref, l_ref, k_buf, v_buf, sem, *,
+                             split_size: int, d: int, num_splits: int,
+                             num_buffers: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    kv_len = kv_len_ref[b]
+    nb = num_buffers
+
+    def kv_copy(blk, slot):
+        start = blk * split_size
+        return (
+            pltpu.make_async_copy(
+                k_hbm.at[b, h, pl.ds(start, split_size), :],
+                k_buf.at[slot], sem.at[0, slot]),
+            pltpu.make_async_copy(
+                v_hbm.at[b, h, pl.ds(start, split_size), :],
+                v_buf.at[slot], sem.at[1, slot]),
+        )
+
+    for slot in range(min(nb - 1, num_splits)):
+        ck, cv = kv_copy(slot, slot)
+        ck.start()
+        cv.start()
+
+    q = q_ref[0, 0].astype(jnp.float32)           # [G, D]
+
+    def body(j, carry):
+        nxt = j + nb - 1
+
+        @pl.when(nxt < num_splits)
+        def _prefetch():
+            ck, cv = kv_copy(nxt, jax.lax.rem(nxt, nb))
+            ck.start()
+            cv.start()
+
+        slot = jax.lax.rem(j, nb)
+        ck, cv = kv_copy(j, slot)
+        ck.wait()
+        cv.wait()
+        k = k_buf[slot].astype(jnp.float32)       # [ss, D]
+        v = v_buf[slot].astype(jnp.float32)       # [ss, D]
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / np.sqrt(d))                # [G, ss]
+        pos = j * split_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+
+        m = jnp.max(s, axis=1, keepdims=True)     # [G, 1]
+        safe_m = jnp.maximum(m, -1e29)
+        p = jnp.where(m > NEG_INF / 2, jnp.exp(s - safe_m), 0.0)
+        l = jnp.sum(p, axis=1, keepdims=True)
+        acc = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        o_ref[0, 0, j] = acc
+        m_ref[0, 0, j] = m
+        l_ref[0, 0, j] = l
+        return carry
+
+    jax.lax.fori_loop(0, num_splits, body, 0)
+
+
+def decode_attention_fwd_pipelined(
+    q: jax.Array,        # [B, Hq, D]
+    k: jax.Array,        # [B, S, Hkv, D]
+    v: jax.Array,
+    kv_len: jax.Array,   # [B] int32
+    *,
+    num_splits: int,
+    num_buffers: int = 2,
+    vmem_limit: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Split-K decode with an explicit KV staging ring — bit-identical to
+    :func:`decode_attention_fwd` (identical per-split partials, identical
+    combine)."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    ns = autotune.fit_block(s, num_splits)
+    ss = s // ns
+    nb = min(max(1, num_buffers), ns)
+
+    qt = q.reshape(b, hkv, g, d)
+    kt = k.transpose(0, 2, 1, 3)   # [B, Hkv, S, D]
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _decode_pipelined_kernel, split_size=ss, d=d, num_splits=ns,
+        num_buffers=nb)
+    params = dict(dimension_semantics=("parallel", "parallel"))
+    if vmem_limit is not None:
+        params["vmem_limit_bytes"] = int(vmem_limit)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, *_: (b_, h, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, ns, g, d),
+                         lambda b_, h, *_: (b_, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, ns, g, 1),
+                         lambda b_, h, *_: (b_, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, ns, g, 1),
+                         lambda b_, h, *_: (b_, h, 0, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nb, ss, d), kt.dtype),
+            pltpu.VMEM((nb, ss, d), vt.dtype),
+            pltpu.SemaphoreType.DMA((2, nb)),
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, ns, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, ns, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, ns, g, 1), jnp.float32),
+        ],
+        compiler_params=compat.tpu_compiler_params(**params),
+        interpret=interpret,
+        name="flash_decode_pipelined",
+    )(kv_len.astype(jnp.int32), qt, kt, vt)
+
+    # combine shared verbatim with the classic kernel (bit-identity)
+    m_glob = jnp.max(m_part, axis=2, keepdims=True)          # [B,Hkv,1,G,1]
+    w = jnp.exp(m_part - m_glob)
+    l_glob = jnp.sum(l_part * w, axis=2)                     # [B,Hkv,G,1]
+    o = jnp.sum(o_part * w, axis=2) / jnp.maximum(l_glob, 1e-30)
+    return o.reshape(b, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Paged variant: the KV cache is a shared page pool addressed per row
 # through a page table.  Split-K's fixed stride becomes the page: the grid's
 # third axis walks LOGICAL pages and the k/v index maps dereference the
@@ -215,6 +365,149 @@ def paged_decode_attention_fwd(
         ),
         interpret=interpret,
         name="paged_flash_decode",
+    )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32), qt, kt, vt)
+
+    # identical partial-softmax combine: logical pages are the splits
+    m_glob = jnp.max(m_part, axis=2, keepdims=True)
+    w = jnp.exp(m_part - m_glob)
+    l_glob = jnp.sum(l_part * w, axis=2)
+    o = jnp.sum(o_part * w, axis=2) / jnp.maximum(l_glob, 1e-30)
+    return o.reshape(b, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Multi-buffered paged variant: the page gather IS the DMA — each logical
+# page's fetch from its physical pool row (scalar-prefetched page table)
+# overlaps compute on the previous page through the same VMEM ring as the
+# dense pipelined kernel.  Per-page partials + shared combine keep it
+# bit-identical to ``paged_decode_attention_fwd``.
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_pipelined_kernel(pt_ref, kv_len_ref, q_ref, k_hbm, v_hbm,
+                                   o_ref, m_ref, l_ref, k_buf, v_buf, sem, *,
+                                   page_size: int, d: int, pages: int,
+                                   num_buffers: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    kv_len = kv_len_ref[b]
+    nb = num_buffers
+
+    def kv_copy(blk, slot):
+        phys = pt_ref[b, blk]                     # physical pool row
+        return (
+            pltpu.make_async_copy(
+                k_hbm.at[phys, h], k_buf.at[slot], sem.at[0, slot]),
+            pltpu.make_async_copy(
+                v_hbm.at[phys, h], v_buf.at[slot], sem.at[1, slot]),
+        )
+
+    for slot in range(min(nb - 1, pages)):
+        ck, cv = kv_copy(slot, slot)
+        ck.start()
+        cv.start()
+
+    q = q_ref[0, 0].astype(jnp.float32)           # [G, D]
+
+    def body(j, carry):
+        nxt = j + nb - 1
+
+        @pl.when(nxt < pages)
+        def _prefetch():
+            ck, cv = kv_copy(nxt, jax.lax.rem(nxt, nb))
+            ck.start()
+            cv.start()
+
+        slot = jax.lax.rem(j, nb)
+        ck, cv = kv_copy(j, slot)
+        ck.wait()
+        cv.wait()
+        k = k_buf[slot].astype(jnp.float32)       # [ps, D]
+        v = v_buf[slot].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / np.sqrt(d))                # [G, ps]
+        pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+
+        m = jnp.max(s, axis=1, keepdims=True)     # [G, 1]
+        safe_m = jnp.maximum(m, -1e29)
+        p = jnp.where(m > NEG_INF / 2, jnp.exp(s - safe_m), 0.0)
+        l = jnp.sum(p, axis=1, keepdims=True)
+        acc = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        o_ref[0, 0, j] = acc
+        m_ref[0, 0, j] = m
+        l_ref[0, 0, j] = l
+        return carry
+
+    jax.lax.fori_loop(0, pages, body, 0)
+
+
+def paged_decode_attention_fwd_pipelined(
+    q: jax.Array,           # [B, Hq, D]
+    k_pool: jax.Array,      # [Np, ps, Hkv, D] shared page pool
+    v_pool: jax.Array,
+    page_table: jax.Array,  # [B, P] int32 pool indices per logical page
+    kv_len: jax.Array,      # [B] int32
+    *,
+    num_buffers: int = 2,
+    vmem_limit: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged decode with an explicit page staging ring — bit-identical to
+    :func:`paged_decode_attention_fwd`."""
+    b, hq, d = q.shape
+    ps, hkv = k_pool.shape[1], k_pool.shape[2]
+    pages = page_table.shape[1]
+    g = hq // hkv
+    nb = min(max(1, num_buffers), pages)
+
+    qt = q.reshape(b, hkv, g, d)
+    kt = k_pool.transpose(0, 2, 1, 3)   # [Np, Hkv, ps, D]
+    vt = v_pool.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _paged_decode_pipelined_kernel, page_size=ps, d=d, pages=pages,
+        num_buffers=nb)
+    params = dict(dimension_semantics=("parallel", "parallel"))
+    if vmem_limit is not None:
+        params["vmem_limit_bytes"] = int(vmem_limit)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, *_: (b_, h, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, pages, g, d),
+                         lambda b_, h, *_: (b_, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, pages, g, 1),
+                         lambda b_, h, *_: (b_, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, pages, g, 1),
+                         lambda b_, h, *_: (b_, h, 0, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nb, ps, d), kt.dtype),
+            pltpu.VMEM((nb, ps, d), vt.dtype),
+            pltpu.SemaphoreType.DMA((2, nb)),
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, pages, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, pages, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, pages, g, 1), jnp.float32),
+        ],
+        compiler_params=compat.tpu_compiler_params(**params),
+        interpret=interpret,
+        name="paged_flash_decode_pipelined",
     )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32), qt, kt, vt)
 
     # identical partial-softmax combine: logical pages are the splits

@@ -1,5 +1,13 @@
-"""Public flash-decode op: split count resolved through the measured
-tuning db (repro.core.autotune_search), analytic cost-model fallback."""
+"""Public flash-decode ops: split count and KV staging depth resolved
+through the measured tuning db (repro.core.autotune_search), analytic
+cost-model fallback.
+
+``num_buffers`` > 1 routes to the pipelined kernels (sequential splits
+with the next split's KV fetch in flight — bit-identical partials and
+combine); depth 1 is the classic split-parallel kernel.  A depth whose
+staging ring would not fit ``vmem_limit`` falls back through
+:func:`repro.core.autotune.fit_buffer_depth`.
+"""
 
 from __future__ import annotations
 
@@ -7,15 +15,29 @@ from typing import Optional
 
 import jax
 
-from repro.core import autotune_search
-from repro.kernels.decode_attention.kernel import (decode_attention_fwd,
-                                                  paged_decode_attention_fwd)
+from repro.core import autotune, autotune_search
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_fwd, decode_attention_fwd_pipelined,
+    paged_decode_attention_fwd, paged_decode_attention_fwd_pipelined)
 
 
 _decode_jit = jax.jit(decode_attention_fwd,
                       static_argnames=("num_splits", "interpret"))
+_decode_pipe_jit = jax.jit(
+    decode_attention_fwd_pipelined,
+    static_argnames=("num_splits", "num_buffers", "vmem_limit", "interpret"))
 _paged_jit = jax.jit(paged_decode_attention_fwd,
                      static_argnames=("interpret",))
+_paged_pipe_jit = jax.jit(
+    paged_decode_attention_fwd_pipelined,
+    static_argnames=("num_buffers", "vmem_limit", "interpret"))
+
+
+def _fit_depth(num_buffers, block_rows, d, dtype, vmem_limit):
+    dtype_bytes = max(1, jax.numpy.dtype(dtype).itemsize)
+    return autotune.fit_buffer_depth(
+        num_buffers, 2 * block_rows * d * dtype_bytes,
+        vmem_limit=vmem_limit)
 
 
 def decode_attention(
@@ -25,17 +47,27 @@ def decode_attention(
     kv_len: jax.Array,   # [B] int32
     *,
     num_splits: Optional[int] = None,
+    num_buffers: Optional[int] = None,
+    vmem_limit: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     # not jitted: the db lookup must run per call (see flash_attention)
     s = k.shape[1]
     d = q.shape[-1]
-    if num_splits is None:
+    if num_splits is None or num_buffers is None:
         cfg = autotune_search.lookup_or_search(
             "decode_attention", s=s, d=d, dtype=q.dtype.name)
-        num_splits = cfg["num_splits"]
+        num_splits = num_splits or cfg["num_splits"]
+        if num_buffers is None:
+            num_buffers = int(cfg.get("num_buffers", 1))
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    ns = autotune.fit_block(s, num_splits)
+    num_buffers = _fit_depth(num_buffers, s // ns, d, q.dtype, vmem_limit)
+    if num_buffers > 1:
+        return _decode_pipe_jit(q, k, v, kv_len, num_splits=num_splits,
+                                num_buffers=num_buffers,
+                                vmem_limit=vmem_limit, interpret=interpret)
     return _decode_jit(q, k, v, kv_len, num_splits=num_splits,
                        interpret=interpret)
 
@@ -47,13 +79,30 @@ def paged_decode_attention(
     page_table: jax.Array,  # [B, P] int32
     kv_len: jax.Array,      # [B] int32
     *,
+    num_buffers: Optional[int] = None,
+    vmem_limit: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Flash-decode against a shared page pool: the split count is the
-    page count (split size = page size, fixed by the allocator), so there
-    is no free block-size knob to tune — the paper's B is chosen once for
-    the whole memory system, and the db lookup is skipped."""
+    """Flash-decode against a shared page pool.  The split count is the
+    page count (split size = page size, fixed by the allocator), so the
+    only free knob is the staging-ring depth ``num_buffers`` — resolved
+    through the tuning db under a bucket that carries ``page_size``
+    explicitly: the page is the DMA block, and two pools with the same
+    total rows but different page sizes must never share a winner."""
+    ps = k_pool.shape[1]
+    pages = page_table.shape[1]
+    d = q.shape[-1]
+    if num_buffers is None:
+        cfg = autotune_search.lookup_or_search(
+            "paged_decode_attention", s=pages * ps, page_size=ps, d=d,
+            dtype=q.dtype.name)
+        num_buffers = int(cfg.get("num_buffers", 1))
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    num_buffers = _fit_depth(num_buffers, ps, d, q.dtype, vmem_limit)
+    if num_buffers > 1:
+        return _paged_pipe_jit(q, k_pool, v_pool, page_table, kv_len,
+                               num_buffers=num_buffers,
+                               vmem_limit=vmem_limit, interpret=interpret)
     return _paged_jit(q, k_pool, v_pool, page_table, kv_len,
                       interpret=interpret)

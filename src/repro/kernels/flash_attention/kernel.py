@@ -131,6 +131,180 @@ def flash_attention_fwd(
 
 
 # ---------------------------------------------------------------------------
+# Multi-buffered forward: explicit DMA/compute pipelining.
+#
+# The classic kernel above leans on Pallas's implicit pipeline: one KV block
+# per grid step, the compiler double-buffers the BlockSpec copies.  This
+# variant owns the KV stream instead: K/V stay in HBM (memory_space=ANY) and
+# the kernel DMAs block j+depth-1 into a VMEM ring of ``num_buffers`` slots
+# while the MXU works on block j — the per-KV-block grid dispatch (the
+# paper's per-claim FAA analogue) collapses into a semaphore wait, and the
+# exposed DMA latency shrinks with depth.  The per-block f32 math is copied
+# from ``_fa_kernel`` verbatim, so the outputs are bit-identical.
+# ---------------------------------------------------------------------------
+
+
+def _fa_pipelined_kernel(q_ref, k_hbm, v_hbm, o_ref, lse_ref,
+                         acc_ref, m_ref, l_ref, k_buf, v_buf, sem, *,
+                         causal: bool, sq: int, skv: int, bq: int, bk: int,
+                         nk: int, num_buffers: int, g: int):
+    b_ = pl.program_id(0)
+    h = pl.program_id(1)
+    i = pl.program_id(2)
+    hkv = h // g
+    nb = num_buffers
+
+    # causal trip count: the last KV block intersecting the diagonal band.
+    # Same predicate as the classic kernel's ``run`` — blocks with
+    # j*bk <= i*bq + bq - 1 + (skv - sq) form a contiguous prefix.
+    if causal:
+        bound = i * bq + bq - 1 + (skv - sq)
+        nk_run = jnp.clip(jnp.floor_divide(bound, bk) + 1, 0, nk)
+    else:
+        nk_run = nk
+
+    def kv_copy(blk, slot):
+        start = blk * bk
+        return (
+            pltpu.make_async_copy(
+                k_hbm.at[b_, hkv, pl.ds(start, bk), :],
+                k_buf.at[slot], sem.at[0, slot]),
+            pltpu.make_async_copy(
+                v_hbm.at[b_, hkv, pl.ds(start, bk), :],
+                v_buf.at[slot], sem.at[1, slot]),
+        )
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+
+    # prologue: blocks 0..nb-2 in flight before any compute
+    for slot in range(nb - 1):
+        @pl.when(slot < nk_run)
+        def _start(slot=slot):
+            ck, cv = kv_copy(slot, slot)
+            ck.start()
+            cv.start()
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [bq, d]
+
+    def body(j, carry):
+        nxt = j + nb - 1
+
+        @pl.when(nxt < nk_run)
+        def _prefetch():
+            ck, cv = kv_copy(nxt, jax.lax.rem(nxt, nb))
+            ck.start()
+            cv.start()
+
+        slot = jax.lax.rem(j, nb)
+        ck, cv = kv_copy(j, slot)
+        ck.wait()
+        cv.wait()
+        k = k_buf[slot].astype(jnp.float32)           # [bk, d]
+        v = v_buf[slot].astype(jnp.float32)           # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / np.sqrt(q.shape[-1]))          # [bq, bk]
+
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0) + (skv - sq)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # [bq, bk]
+        corr = jnp.exp(m_prev - m_new)                 # [bq, 1]
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        return carry
+
+    jax.lax.fori_loop(0, nk_run, body, 0)
+
+    l = jnp.maximum(l_ref[...], 1e-30)
+    o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+    lse_ref[0, 0] = (m_ref[...] + jnp.log(l)).astype(jnp.float32)
+
+
+def flash_attention_fwd_pipelined(
+    q: jax.Array,      # [B, Sq, Hq, D]
+    k: jax.Array,      # [B, Skv, Hkv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int,
+    block_k: int,
+    num_buffers: int = 2,
+    vmem_limit: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Forward with an explicit ``num_buffers``-deep KV staging ring.
+
+    Bit-identical to :func:`flash_attention_fwd` (same per-block f32 math,
+    same accumulation order).  ``vmem_limit`` is handed to the Mosaic
+    compiler as its VMEM budget on backends that honor it; depth
+    feasibility against the budget is the *caller's* job
+    (``autotune.fit_buffer_depth`` — ops.py falls back to depth 1).
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq, bk = min(block_q, sq), min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    assert num_buffers >= 1, num_buffers
+    nq, nk = sq // bq, skv // bk
+    nb = min(num_buffers, nk)   # depth beyond the block count is dead VMEM
+
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _fa_pipelined_kernel, causal=causal, sq=sq, skv=skv, bq=bq, bk=bk,
+        nk=nk, num_buffers=nb, g=g)
+
+    params = dict(dimension_semantics=("parallel", "parallel", "parallel"))
+    if vmem_limit is not None:
+        params["vmem_limit_bytes"] = int(vmem_limit)
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i: (b_, h, i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h, i: (b_, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, sq, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((nb, bk, d), kt.dtype),
+            pltpu.VMEM((nb, bk, d), vt.dtype),
+            pltpu.SemaphoreType.DMA((2, nb)),
+        ],
+        compiler_params=compat.tpu_compiler_params(**params),
+        interpret=interpret,
+        name="flash_attention_fwd_pipelined",
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3), lse[..., 0]
+
+
+# ---------------------------------------------------------------------------
 # backward — standard flash recompute: dq kernel + dkv kernel
 # ---------------------------------------------------------------------------
 

@@ -1,11 +1,14 @@
-"""Public flash-attention op: autotuned blocks, custom_vjp (flash backward
-kernels), CPU interpret fallback.
+"""Public flash-attention op: autotuned blocks + KV staging depth,
+custom_vjp (flash backward kernels), CPU interpret fallback.
 
 On CPU (this container) the kernels run in interpret mode for validation;
-on TPU they compile to Mosaic.  Block sizes resolve through
-repro.core.autotune_search.lookup_or_search: the measured winner when the
-tuning db knows this (backend, shape-bucket), the cost model's analytic
-pick otherwise.
+on TPU they compile to Mosaic.  Block sizes and the DMA staging-ring depth
+(``num_buffers``) resolve through repro.core.autotune_search
+.lookup_or_search: the measured winner when the tuning db knows this
+(backend, shape-bucket), the cost model's analytic pick otherwise.  A
+depth that would not fit the VMEM budget at the resolved blocks falls back
+through :func:`repro.core.autotune.fit_buffer_depth` — bottoming out at
+depth 1, the classic (non-pipelined) kernel.
 """
 
 from __future__ import annotations
@@ -16,40 +19,71 @@ from typing import Optional
 import jax
 
 from repro.core import autotune, autotune_search
-from repro.kernels.flash_attention.kernel import (flash_attention_bwd,
-                                                  flash_attention_fwd)
+from repro.kernels.flash_attention.kernel import (
+    flash_attention_bwd, flash_attention_fwd, flash_attention_fwd_pipelined)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _resolve_blocks(sq, skv, d, block_q, block_k, dtype, causal):
-    if block_q is None or block_k is None:
+def _resolve_config(sq, skv, d, block_q, block_k, num_buffers, vmem_limit,
+                    dtype, causal):
+    """(block_q, block_k, num_buffers) — db/analytic for anything the
+    caller left None, then grid-fitted and VMEM-fitted."""
+    if block_q is None or block_k is None or num_buffers is None:
         cfg = autotune_search.lookup_or_search(
             "flash_attention", sq=sq, skv=skv, d=d, dtype=dtype,
             causal=causal)
         block_q = block_q or max(8, min(cfg["block_q"], sq))
         block_k = block_k or max(8, min(cfg["block_k"], skv))
+        if num_buffers is None:
+            num_buffers = int(cfg.get("num_buffers", 1))
     # largest feasible divisor <= the tuned block (the old power-of-two
     # halving collapsed to degenerate widths on non-power-of-two lengths)
-    return autotune.fit_block(sq, block_q), autotune.fit_block(skv, block_k)
+    block_q = autotune.fit_block(sq, block_q)
+    block_k = autotune.fit_block(skv, block_k)
+    # single-buffer fallback: depth halves until the staging ring fits
+    dtype_bytes = max(1, jax.numpy.dtype(dtype).itemsize)
+    num_buffers = autotune.fit_buffer_depth(
+        num_buffers,
+        2 * block_k * d * dtype_bytes,
+        vmem_limit=vmem_limit,
+        base_bytes=2 * block_q * d * dtype_bytes
+        + 4 * (block_q * block_k + 2 * block_q))
+    return block_q, block_k, num_buffers
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _flash(q, k, v, causal, block_q, block_k, interpret):
-    out, _ = flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
-                                 block_k=block_k, interpret=interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, block_q, block_k, num_buffers, vmem_limit,
+           interpret):
+    out, _ = _fwd(q, k, v, causal, block_q, block_k, num_buffers,
+                  vmem_limit, interpret)
     return out
 
 
-def _flash_fwd(q, k, v, causal, block_q, block_k, interpret):
-    out, lse = flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
-                                   block_k=block_k, interpret=interpret)
+def _fwd(q, k, v, causal, block_q, block_k, num_buffers, vmem_limit,
+         interpret):
+    if num_buffers > 1:
+        return flash_attention_fwd_pipelined(
+            q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+            num_buffers=num_buffers, vmem_limit=vmem_limit,
+            interpret=interpret)
+    return flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_k, num_buffers, vmem_limit,
+               interpret):
+    out, lse = _fwd(q, k, v, causal, block_q, block_k, num_buffers,
+                    vmem_limit, interpret)
     return out, (q, k, v, out, lse)
 
 
-def _flash_bwd(causal, block_q, block_k, interpret, res, do):
+def _flash_bwd(causal, block_q, block_k, num_buffers, vmem_limit, interpret,
+               res, do):
+    # backward stays on the classic kernels: its KV blocks are consumed by
+    # two matmuls each, so the implicit pipeline already overlaps well
     q, k, v, out, lse = res
     dq, dk, dv = flash_attention_bwd(
         q, k, v, out, lse, do, causal=causal, block_q=block_q,
@@ -59,7 +93,7 @@ def _flash_bwd(causal, block_q, block_k, interpret, res, do):
 
 _flash.defvjp(_flash_fwd, _flash_bwd)
 
-_flash_jit = jax.jit(_flash, static_argnums=(3, 4, 5, 6))
+_flash_jit = jax.jit(_flash, static_argnums=(3, 4, 5, 6, 7, 8))
 
 
 def flash_attention(
@@ -70,21 +104,30 @@ def flash_attention(
     causal: bool = True,
     block_q: Optional[int] = None,
     block_k: Optional[int] = None,
+    num_buffers: Optional[int] = None,
+    vmem_limit: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """q [B,Sq,Hq,D], k/v [B,Skv,Hkv,D] -> [B,Sq,Hq,D]. Differentiable
     (flash backward kernels with recompute).
 
+    ``num_buffers`` > 1 stages KV blocks through an explicit DMA ring
+    (bit-identical numerics); ``vmem_limit`` bounds the staging budget
+    (None = the autotuner's VMEM_BUDGET) and is passed to the Mosaic
+    compiler.  Both default to the tuning db's winner for this bucket.
+
     Deliberately NOT jitted: the tuning-db lookup must run per call, not
     be baked into a jit cache keyed only by shape — a db warmed after the
     first call (or a REPRO_TUNING flip) takes effect on the next call.
-    The resolved blocks are static args of the inner jit, so same-config
+    The resolved config is static args of the inner jit, so same-config
     calls still hit one compiled executable.
     """
     b, sq, hq, d = q.shape
     skv = k.shape[1]
-    block_q, block_k = _resolve_blocks(sq, skv, d, block_q, block_k,
-                                       q.dtype.name, causal)
+    block_q, block_k, num_buffers = _resolve_config(
+        sq, skv, d, block_q, block_k, num_buffers, vmem_limit,
+        q.dtype.name, causal)
     if interpret is None:
         interpret = not _on_tpu()
-    return _flash_jit(q, k, v, causal, block_q, block_k, interpret)
+    return _flash_jit(q, k, v, causal, block_q, block_k, num_buffers,
+                      vmem_limit, interpret)

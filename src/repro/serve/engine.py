@@ -83,6 +83,12 @@ class ServeConfig:
     # the admission counter and the page counter)
     page_alloc_schedule: Optional[str] = None
     page_alloc_block: Optional[int] = None  # pages per claim FAA
+    # aging bound on admission deferral: once a request has been pushed
+    # back this many times under page pressure, other free slots stop
+    # admitting (they re-queue without penalty) until it gets in — running
+    # slots drain, pages free, and the large request stops losing every
+    # race to smaller ones behind it.  None disables the barrier.
+    max_deferred_ticks: Optional[int] = 32
 
 
 class Engine:
@@ -102,9 +108,18 @@ class Engine:
         self._argmax = jax.jit(
             lambda logits: jnp.argmax(logits, axis=-1).astype(jnp.int32))
         self._splice = None     # built lazily (needs the cache axis probe)
+        # the serve cache backend persists across serve() calls so the
+        # prefix trie and page pool survive request churn; reset_cache()
+        # drops it explicitly
+        self._backend = None
         # ScheduleStats of each slot-refill / admission pass (see serve())
         self.refill_stats: list = []
         self.last_report: Optional[ServeReport] = None
+
+    def reset_cache(self) -> None:
+        """Drop the persistent serve cache backend (page pool, prefix
+        trie, KV pages); the next ``serve()`` call builds a fresh one."""
+        self._backend = None
 
     # ------------------------------------------------------------- sampling
 
@@ -264,13 +279,23 @@ class Engine:
                                          prompt_len=r.prompt_len)
                  for r in requests}
         tick = 0
+        # rid of a request past the cfg.max_deferred_ticks aging bound:
+        # while set, admission is barred for everyone else (see below)
+        starving: Optional[int] = None
 
         def cap_of(req: Request) -> int:
             return (max_new_tokens if req.max_new_tokens is None
                     else min(req.max_new_tokens, max_new_tokens))
 
         from repro.serve.paged_cache import make_cache_backend
-        backend = make_cache_backend(self)
+        # reuse the persistent backend: the prefix trie and page pool must
+        # survive request churn across serve() calls (rebuilding per call
+        # silently discarded every cached prefix).  begin_call() re-arms
+        # the per-call report window; reset_cache() forces a rebuild.
+        if self._backend is None or self._backend.name != cfg.cache:
+            self._backend = make_cache_backend(self)
+        backend = self._backend
+        backend.begin_call()
         backend.validate(requests, cap_of)
         t0 = time.monotonic()
 
@@ -301,6 +326,15 @@ class Engine:
                     telem[req.rid].finish_s = time.monotonic() - t0
                     progress = True
                     continue
+                if starving is not None and req.rid != starving:
+                    # aging barrier: a request past the deferral bound is
+                    # waiting on pages, and every small admission here
+                    # would snatch them first — steady churn then defers
+                    # the large request forever.  Hold this slot empty
+                    # (re-queue, no deferral penalty) until the starving
+                    # request lands; running slots drain and free pages.
+                    queue.push_back(s, req)
+                    continue
                 res = backend.admit(s, req, cap_of(req))
                 if res is None:
                     # partial admission: the request's page demand exceeds
@@ -308,9 +342,16 @@ class Engine:
                     # (still next in its claim order), retry once decode
                     # ticks free pages
                     queue.push_back(s, req)
-                    telem[req.rid].deferred_ticks += 1
+                    tm = telem[req.rid]
+                    tm.deferred_ticks += 1
+                    if (starving is None
+                            and cfg.max_deferred_ticks is not None
+                            and tm.deferred_ticks > cfg.max_deferred_ticks):
+                        starving = req.rid
                     continue
                 progress = True
+                if req.rid == starving:
+                    starving = None
                 key = jax.random.fold_in(jax.random.PRNGKey(seed), req.rid)
                 key, k0 = jax.random.split(key)
                 first = self._sample_row(res.logits_row, k0)

@@ -287,8 +287,14 @@ class ContiguousBackend:
     def __init__(self, engine):
         self.eng = engine
         engine._ensure_splice()
-        cfg = engine.cfg
-        model = engine.model
+        self.begin_call()
+
+    def begin_call(self) -> None:
+        """Fresh rows every ``serve()`` call: contiguous rows carry no
+        cross-call state worth keeping (no pool, no prefix trie), and a
+        stale row length would poison the first admission."""
+        cfg = self.eng.cfg
+        model = self.eng.model
         self.cache = model.set_cache_lengths(
             model.init_cache(cfg.slots, cfg.max_len,
                              jnp.dtype(cfg.cache_dtype)),
@@ -380,6 +386,28 @@ class PagedBackend:
             c, row, ln, spec=spec, page_size=self.ps))
         self._continue = jax.jit(model.prefill_continue)
         self._release = jax.jit(_release_slot)
+        self.begin_call()
+
+    def begin_call(self) -> None:
+        """Arm a per-call report window.  The pool, the prefix trie and
+        their lifetime counters all persist across ``serve()`` calls —
+        that persistence IS the prefix cache's value (a prefix cached in
+        one call must hit in the next), and rebuilding the backend per
+        call silently threw the trie away.  Each call's ``ServeReport``
+        still covers that call alone: counters are reported as deltas
+        against this snapshot, and the peak-live watermark re-arms at the
+        current residency (cache-held pages at call start count toward
+        the new peak, as they should — they are live pool occupancy)."""
+        self._snap = {
+            "pages_allocated": self.alloc.pages_allocated,
+            "pages_freed": self.alloc.pages_freed,
+            "stats": len(self.alloc.stats),
+            "deferred": self.deferred,
+            "hits": 0 if self.prefix is None else self.prefix.hits,
+            "hit_tokens": (0 if self.prefix is None
+                           else self.prefix.hit_tokens),
+        }
+        self.alloc.peak_live = self.alloc.live_count
 
     # ------------------------------------------------------------- admission
 
@@ -474,16 +502,21 @@ class PagedBackend:
                                        jnp.asarray(slot, jnp.int32))
 
     def fill_report(self, report) -> None:
+        # per-call deltas against the begin_call() snapshot: the backend
+        # outlives the call, the report must not (see begin_call)
+        snap = self._snap
         report.cache = self.name
         report.num_pages = self.num_pages
-        report.pages_allocated = self.alloc.pages_allocated
-        report.pages_freed = self.alloc.pages_freed
+        report.pages_allocated = (self.alloc.pages_allocated
+                                  - snap["pages_allocated"])
+        report.pages_freed = self.alloc.pages_freed - snap["pages_freed"]
         report.peak_pages_live = self.alloc.peak_live
-        report.page_alloc_stats = list(self.alloc.stats)
-        report.deferred_admissions = self.deferred
+        report.page_alloc_stats = list(self.alloc.stats[snap["stats"]:])
+        report.deferred_admissions = self.deferred - snap["deferred"]
         if self.prefix is not None:
-            report.prefix_hits = self.prefix.hits
-            report.prefix_hit_tokens = self.prefix.hit_tokens
+            report.prefix_hits = self.prefix.hits - snap["hits"]
+            report.prefix_hit_tokens = (self.prefix.hit_tokens
+                                        - snap["hit_tokens"])
 
 
 def _release_slot(cache, slot):

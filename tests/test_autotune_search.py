@@ -24,6 +24,8 @@ FLASH_SHAPE = dict(sq=32, skv=32, d=16, dtype="float32", causal=True)
 ALL_SHAPES = {
     "flash_attention": FLASH_SHAPE,
     "decode_attention": dict(s=64, d=16, dtype="float32"),
+    "paged_decode_attention": dict(s=64, page_size=16, d=16,
+                                   dtype="float32"),
     "moe_gmm": dict(c=32, d=32, f=32, dtype="float32"),
     "mamba_ssd": dict(s=32, p=16, n=16, dtype="float32"),
 }
@@ -54,6 +56,24 @@ def test_fit_block_picks_largest_divisor():
     assert autotune.fit_block(128, 32) == 32   # divisible: unchanged
     assert autotune.fit_block(7, 4) == 1       # prime below target: floor
     assert autotune.fit_block(1, 512) == 1
+
+
+def test_fit_buffer_depth_halves_to_vmem_and_bottoms_at_one():
+    """The single-buffer fallback: the staging ring (depth x block bytes,
+    on top of base_bytes) halves until it fits the budget, bottoming out
+    at depth 1 — never an infeasible ring, never a crash."""
+    # 4 x 1KiB ring fits a 8KiB budget
+    assert autotune.fit_buffer_depth(4, 1024, vmem_limit=8192) == 4
+    # ...but only depth 2 fits 3KiB
+    assert autotune.fit_buffer_depth(4, 1024, vmem_limit=3 * 1024) == 2
+    # base bytes count against the same budget
+    assert autotune.fit_buffer_depth(
+        4, 1024, vmem_limit=8192, base_bytes=6 * 1024) == 2
+    # nothing fits: bottom out at 1 (the classic kernel), not 0
+    assert autotune.fit_buffer_depth(4, 1024, vmem_limit=1) == 1
+    assert autotune.fit_buffer_depth(1, 10 ** 9, vmem_limit=1) == 1
+    # None = the autotuner's VMEM_BUDGET default
+    assert autotune.fit_buffer_depth(2, 1024) == 2
 
 
 def test_flash_non_pow2_seq_uses_divisor_blocks():
@@ -109,10 +129,10 @@ def test_decode_non_pow2_split_fits_divisor():
 def test_search_persists_and_warm_reload_measures_nothing(db_path):
     cfg = autotune_search.lookup_or_search(
         "flash_attention", options=FAST, **FLASH_SHAPE)
-    assert set(cfg) == {"block_q", "block_k"}
+    assert set(cfg) == {"block_q", "block_k", "num_buffers"}
     assert autotune_search.measurement_count() > 0
     raw = json.loads(db_path.read_text())
-    assert raw["kind"] == "tuning_db" and raw["version"] == 1
+    assert raw["kind"] == "tuning_db" and raw["version"] == 2
     (entry,) = raw["payload"]["entries"].values()
     assert entry["config"] == cfg
     assert entry["measured_s"] <= entry["analytic_s"]
@@ -126,7 +146,7 @@ def test_search_persists_and_warm_reload_measures_nothing(db_path):
     assert autotune_search.measurement_count() == before
 
 
-def test_warm_db_resolves_all_four_kernels_with_zero_measurements(db_path):
+def test_warm_db_resolves_all_kernels_with_zero_measurements(db_path):
     """The acceptance criterion: warm db => zero timed measurements for
     every kernel's config resolution."""
     for kernel, shape in ALL_SHAPES.items():
@@ -155,6 +175,29 @@ def test_shape_bucket_collision_shares_one_entry(db_path):
     autotune_search.lookup_or_search(
         "flash_attention", options=FAST,
         sq=96, skv=96, d=32, dtype="float32", causal=True)
+    assert len(autotune_search.get_db()) == 2
+
+
+def test_paged_bucket_keys_on_page_size(db_path):
+    """The aliasing bugfix: two page pools with the SAME total KV rows but
+    different page sizes stage different DMA blocks — their buckets must
+    never share a tuning-db entry (the old key omitted page_size and let
+    one pool's winner silently drive the other's kernel)."""
+    spec = autotune_search.SPECS["paged_decode_attention"]
+    b16 = spec.bucket(s=64, page_size=16, d=16, dtype="float32")
+    b32 = spec.bucket(s=64, page_size=32, d=16, dtype="float32")
+    assert b16["s"] == b32["s"]                      # same row bucket...
+    assert spec.bucket_key(b16) != spec.bucket_key(b32)  # ...distinct keys
+    autotune_search.lookup_or_search(
+        "paged_decode_attention", options=FAST,
+        s=64, page_size=16, d=16, dtype="float32")
+    assert len(autotune_search.get_db()) == 1
+    # the second page size is a MISS (fresh search), not a silent hit
+    before = autotune_search.measurement_count()
+    autotune_search.lookup_or_search(
+        "paged_decode_attention", options=FAST,
+        s=64, page_size=32, d=16, dtype="float32")
+    assert autotune_search.measurement_count() > before
     assert len(autotune_search.get_db()) == 2
 
 
@@ -198,6 +241,53 @@ def test_corrupt_db_artifact_loads_as_empty(db_path, monkeypatch):
                                    "payload": {}}))
     autotune_search.reset_db()
     assert len(autotune_search.get_db()) == 0  # wrong kind: rejected
+    # a v1 db (pre-num_buffers schema) invalidates on load: empty db,
+    # re-search — stale configs never leak into the v2 resolution path
+    db_path.write_text(json.dumps({
+        "kind": "tuning_db", "version": 1,
+        "payload": {"entries": {"flash_attention|cpu|x": {
+            "config": {"block_q": 8, "block_k": 8}}}}}))
+    autotune_search.reset_db()
+    assert len(autotune_search.get_db()) == 0
+
+
+def test_warm_db_depth_resolves_and_routes_to_pipelined_kernel(
+        db_path, monkeypatch):
+    """The tentpole acceptance: a warm db whose winner carries
+    ``num_buffers > 1`` must (a) resolve that depth with zero
+    measurements and (b) actually execute the pipelined kernel — with
+    output bit-identical to the classic path."""
+    import repro.kernels.flash_attention.ops as fops
+
+    # distinctive blocks so the inner jit cannot have a cached trace from
+    # another test (the spy must be seen at trace time)
+    marker = {"block_q": 8, "block_k": 16, "num_buffers": 2}
+    db = TuningDB.open(db_path)
+    spec = autotune_search.SPECS["flash_attention"]
+    db.record("flash_attention", autotune_search.backend_name(),
+              spec.bucket_key(spec.bucket(**FLASH_SHAPE)), marker)
+    autotune_search.reset_db()
+    monkeypatch.setenv("REPRO_TUNING", "on")
+
+    calls = []
+    real = fops.flash_attention_fwd_pipelined
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs.get("num_buffers"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(fops, "flash_attention_fwd_pipelined", spy)
+    ks = jax.random.split(jax.random.PRNGKey(23), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 16))
+    k = jax.random.normal(ks[1], (1, 32, 2, 16))
+    v = jax.random.normal(ks[2], (1, 32, 2, 16))
+    before = autotune_search.measurement_count()
+    out = fops.flash_attention(q, k, v, interpret=True)  # db decides depth
+    assert autotune_search.measurement_count() == before
+    assert calls == [2]
+    classic = fops.flash_attention(q, k, v, block_q=8, block_k=16,
+                                   num_buffers=1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(classic))
 
 
 # ---------------------------------------------------------------------------

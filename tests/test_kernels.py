@@ -193,6 +193,117 @@ def test_decode_split_invariance():
         np.testing.assert_allclose(o, outs[0], atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# DMA pipelining: multi-buffered KV staging (num_buffers)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_flash_pipelined_bit_identical(depth):
+    """The staging-ring depth is pure scheduling: every depth reproduces
+    the classic kernel BIT-exactly (same f32 op sequence; only the DMA
+    overlap moves), across GQA, both causal bands, and non-power-of-two
+    lengths that route through ``fit_block``."""
+    for key, (b, sq, skv, hq, hkv, d, causal) in enumerate([
+            (1, 64, 64, 2, 2, 16, True),
+            (2, 48, 80, 4, 2, 32, True),     # non-pow2, Sq < Skv
+            (1, 96, 40, 4, 1, 16, False),    # Skv < Sq, non-divisible bk
+    ]):
+        ks = jax.random.split(jax.random.PRNGKey(key), 3)
+        q = jax.random.normal(ks[0], (b, sq, hq, d))
+        k = jax.random.normal(ks[1], (b, skv, hkv, d))
+        v = jax.random.normal(ks[2], (b, skv, hkv, d))
+        base = flash_attention(q, k, v, causal=causal, block_q=16,
+                               block_k=16, num_buffers=1, interpret=True)
+        got = flash_attention(q, k, v, causal=causal, block_q=16,
+                              block_k=16, num_buffers=depth, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(base),
+                                      err_msg=f"case {key} depth {depth}")
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_decode_pipelined_bit_identical(depth):
+    """Pipelined flash-decode writes the same per-split partials and runs
+    the same combine as the split-parallel kernel — bit-identical across
+    partial kv_len and a split count that doesn't divide the sequence."""
+    for key, (b, s, hq, hkv, d, ns) in enumerate([
+            (2, 64, 8, 2, 32, 4),
+            (1, 96, 4, 1, 16, 5),            # non-pow2 splits via fit_block
+    ]):
+        ks = jax.random.split(jax.random.PRNGKey(10 + key), 3)
+        q = jax.random.normal(ks[0], (b, hq, d))
+        k = jax.random.normal(ks[1], (b, s, hkv, d))
+        v = jax.random.normal(ks[2], (b, s, hkv, d))
+        kv_len = jnp.asarray(
+            np.random.RandomState(key).randint(1, s + 1, (b,)), jnp.int32)
+        base = decode_attention(q, k, v, kv_len, num_splits=ns,
+                                num_buffers=1, interpret=True)
+        got = decode_attention(q, k, v, kv_len, num_splits=ns,
+                               num_buffers=depth, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(base),
+                                      err_msg=f"case {key} depth {depth}")
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_paged_decode_pipelined_bit_identical(depth):
+    """Paged variant: the page is the DMA block; prefetching page k+1
+    through the ring while page k computes must not change a bit, page
+    permutations included."""
+    b, pages, ps, hq, hkv, d, num_pages = 2, 6, 8, 8, 2, 32, 16
+    q, kp, vp, pt, kv_len = _paged_case(21, b, pages, ps, hq, hkv, d,
+                                        num_pages)
+    base = paged_decode_attention(q, kp, vp, pt, kv_len, num_buffers=1,
+                                  interpret=True)
+    got = paged_decode_attention(q, kp, vp, pt, kv_len, num_buffers=depth,
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_pipelined_vmem_fallback_single_buffer():
+    """A ``vmem_limit`` too small for the staging ring must fall back to
+    depth 1 (the classic kernel) rather than fail to fit — same bits,
+    and it also bounds the ring when the limit allows some staging."""
+    ks = jax.random.split(jax.random.PRNGKey(31), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32))
+    k = jax.random.normal(ks[1], (1, 64, 2, 32))
+    v = jax.random.normal(ks[2], (1, 64, 2, 32))
+    base = np.asarray(flash_attention(q, k, v, block_q=16, block_k=16,
+                                      num_buffers=1, interpret=True))
+    # 1 byte of VMEM can hold no ring: depth must collapse to 1
+    got = np.asarray(flash_attention(q, k, v, block_q=16, block_k=16,
+                                     num_buffers=4, vmem_limit=1,
+                                     interpret=True))
+    np.testing.assert_array_equal(got, base)
+    kv_len = jnp.array([50], jnp.int32)
+    qd = jax.random.normal(ks[0], (1, 4, 32))
+    base_d = np.asarray(decode_attention(qd, k, v, kv_len, num_splits=4,
+                                         num_buffers=1, interpret=True))
+    got_d = np.asarray(decode_attention(qd, k, v, kv_len, num_splits=4,
+                                        num_buffers=4, vmem_limit=1,
+                                        interpret=True))
+    np.testing.assert_array_equal(got_d, base_d)
+
+
+def test_flash_pipelined_backward_matches_classic():
+    """Gradients flow through the pipelined forward via the same
+    custom_vjp (backward stays on the classic kernels): grads must be
+    bit-identical to the depth-1 path, which is itself oracle-gated."""
+    ks = jax.random.split(jax.random.PRNGKey(17), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 16))
+    k = jax.random.normal(ks[1], (1, 32, 2, 16))
+    v = jax.random.normal(ks[2], (1, 32, 2, 16))
+
+    def loss(depth):
+        return lambda q, k, v: jnp.sum(flash_attention(
+            q, k, v, causal=True, block_q=8, block_k=8, num_buffers=depth,
+            interpret=True) ** 2)
+
+    g1 = jax.grad(loss(1), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss(2), argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32])
 @pytest.mark.parametrize(
     "b,s,h,p,g,n,chunk",

@@ -191,9 +191,12 @@ def test_prefix_hit_zero_recompute_and_bit_identity(dense_setup):
 
 
 def test_prefix_cache_survives_request_churn(dense_setup):
-    """The shared pages outlive the request that created them (the cache
-    holds its own refcount) but die with eviction pressure rather than
-    leaking: serve twice and the second run still hits."""
+    """The shared pages outlive the requests that created them AND the
+    ``serve()`` call itself: the backend persists behind the
+    ``ServeConfig(cache=...)`` seam, so a prefix cached in one call hits
+    in the next — the lifetime bug was rebuilding the trie (and pool) per
+    call, silently discarding every cached prefix.  ``reset_cache()`` is
+    the explicit way back to a cold cache."""
     _, model, params = dense_setup
     cfg, _, _ = dense_setup
     rng = np.random.RandomState(4)
@@ -204,20 +207,85 @@ def test_prefix_cache_survives_request_churn(dense_setup):
     eng = Engine(model, params,
                  ServeConfig(max_len=48, slots=2, cache="paged",
                              page_size=PS, refill_schedule="faa"))
-    eng.serve(prompts, 2)
-    first = eng.last_report.prefix_hits
-    assert first == 2
-    # engine state persists across serve() calls? each serve() builds a
-    # fresh backend — the cache is per-run, so run two batches in one call
-    eng2 = Engine(model, params,
-                  ServeConfig(max_len=48, slots=2, cache="paged",
-                              page_size=PS, refill_schedule="faa"))
-    outs = eng2.serve(prompts + prompts, 2)
-    assert eng2.last_report.prefix_hits == 5
+    out1 = eng.serve(prompts, 2)
+    assert eng.last_report.prefix_hits == 2      # first request is cold
+    # second call, same engine: the trie survived the drain, so EVERY
+    # request hits — and the report covers this call alone (deltas, not
+    # lifetime counters)
+    out2 = eng.serve(prompts, 2)
+    rep = eng.last_report
+    assert rep.prefix_hits == 3
+    assert rep.prefix_hit_tokens == 3 * PS
+    for t in rep.requests:
+        assert t.prefill_tokens + t.prefix_hit_tokens == t.prompt_len
+    # warm tokens stay bit-identical to the cold contiguous reference
     ref = Engine(model, params, ServeConfig(max_len=48, slots=2)).serve(
-        prompts + prompts, 2)
-    for a, b in zip(ref, outs):
+        prompts, 2)
+    for a, b, c in zip(ref, out1, out2):
         np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+    # reset_cache() drops pool + trie: the next call is cold again
+    eng.reset_cache()
+    eng.serve(prompts, 2)
+    assert eng.last_report.prefix_hits == 2
+
+
+def test_deferred_request_not_starved_by_small_churn(dense_setup):
+    """Aging bound on partial-admission deferral.  A large request whose
+    page demand needs the whole pool loses every refill race to smaller
+    requests admitted at lower slot indices: each time pages free, a
+    small request grabs them first, and the large one re-queues forever
+    (``deferred_ticks`` grows with queue depth, unbounded on a steady
+    stream).  ``max_deferred_ticks`` arms an admission barrier once a
+    request ages past the bound — other slots stop admitting until it
+    lands — so its deferral is bounded by the bound plus one drain."""
+    _, model, params = dense_setup
+    cfg, _, _ = dense_setup
+
+    def scenario():
+        rng = np.random.RandomState(8)
+
+        def mk(plen, budget):
+            return Request(
+                prompt=rng.randint(1, cfg.vocab_size, plen).astype(np.int32),
+                max_new_tokens=budget)
+
+        # static admission splits 15 requests [0..6] / [7..14]: slot 0
+        # churns 2-page smalls; slot 1 opens with a desynchronizing small
+        # (budget 7 vs 8) and then wants the 4-page big request — every
+        # time slot 1 retries it, slot 0 has already re-taken the pages
+        smalls0 = [mk(8, 8) for _ in range(7)]
+        opener, big = mk(9, 7), mk(16, 16)
+        rest = [mk(8, 8) for _ in range(6)]
+        return smalls0 + [opener, big] + rest
+
+    def run(mdt):
+        eng = Engine(model, params,
+                     ServeConfig(max_len=48, slots=2, cache="paged",
+                                 page_size=PS, num_pages=4,
+                                 prefix_cache=False,
+                                 refill_schedule="static",
+                                 max_deferred_ticks=mdt))
+        outs = eng.serve(scenario(), 16)
+        return outs, eng.last_report
+
+    # the hazard is real: with the barrier disabled the big request (rid
+    # 8) starves until the churn drains completely
+    _, rep_off = run(None)
+    big_off = rep_off.requests[8]
+    assert big_off.deferred_ticks > 50
+    # with the bound, deferral stops at the bound plus one slot drain
+    outs, rep = run(5)
+    big = rep.requests[8]
+    assert big.deferred_ticks <= 5 + 10
+    assert big.admit_tick < big_off.admit_tick
+    # the barrier reorders admissions, never tokens: greedy output stays
+    # bit-identical to the contiguous engine on the same requests
+    ref = Engine(model, params,
+                 ServeConfig(max_len=48, slots=2,
+                             refill_schedule="static")).serve(scenario(), 16)
+    for i, (a, b) in enumerate(zip(ref, outs)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
 
 
 def test_concurrency_beyond_slot_parity_at_fixed_memory(dense_setup):

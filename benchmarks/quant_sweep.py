@@ -1,0 +1,161 @@
+"""Quantized-vs-wide execution paths, arbitrated by the measured tuner.
+
+Two modes, one question each:
+
+* ``--dry-run`` (the CI smoke step) — no kernel executes.  The cost
+  model's DMA term is evaluated for the analytic pick of every attention
+  kernel at both storage widths, and two invariants are hard-asserted:
+
+  1. the quantized pick never moves more bytes (``dma_s``) and never
+     models more compute than the bf16 pick — quantization attacks the
+     DMA term, so the pick it tunes must actually shrink it.  (The
+     *exposed* stall is compared per depth, not across picks: quantized
+     dense decode is classic-only, so a deep bf16 staging ring may model
+     a smaller exposed stall while still moving twice the bytes.);
+  2. the quantized-KV concurrency win at a fixed page-pool byte budget
+     (>= 1.8x, delegated to
+     :func:`benchmarks.serve_paged_sweep.quant_budget_table`, which
+     derives pool bytes from the real cache shapes via ``eval_shape``).
+
+* timed (default) — the measured search runs per (kernel, shape, dtype)
+  against a memory-only db: quantized buckets sweep the *quantized*
+  kernel variants on quantized synthetic inputs, and the table reports
+  the measured winner per dtype side by side.  Off-TPU the wall clock
+  runs interpret mode, where dequantization costs python time instead of
+  saving DMA time — the timed table is a provenance record, not a gate;
+  the modeled gate lives in ``--dry-run``.  After each search the warm
+  db is re-queried under a measurement spy: steady-state resolution of a
+  dtype-specific winner must perform zero timed runs.
+
+    PYTHONPATH=src python -m benchmarks.quant_sweep --dry-run
+    PYTHONPATH=src python -m benchmarks.quant_sweep
+"""
+
+from __future__ import annotations
+
+import argparse
+
+TABLE = "quant_sweep"
+
+# the attention kernels whose KV stream the quantized paths shrink; gmm
+# and ssd quantize weights/activations and ride the same search, but the
+# DMA breakdown models the staged KV stream only
+_ATTN = ("flash_attention", "decode_attention", "paged_decode_attention")
+
+WIDE = "bfloat16"
+
+
+def _shapes() -> dict[str, list[dict]]:
+    from repro.core.autotune_search import QUICK_SHAPES
+
+    shapes = {k: [dict(s) for s in v] for k, v in QUICK_SHAPES.items()}
+    # the open page-size bucket: ServeConfig(page_size=None) resolves its
+    # pool layout through exactly this entry, so the sweep must keep it
+    # warm alongside the fixed-page buckets
+    shapes["paged_decode_attention"].append(dict(s=128, page_size=0, d=16))
+    return shapes
+
+
+def _modeled_total(kernel: str, bucket: dict, config: dict) -> float:
+    from repro.core.autotune_search.kernels import dma_compute_breakdown
+
+    br = dma_compute_breakdown(kernel, bucket, config)
+    return br["compute_s"] + br["stall_s"], br
+
+
+def dry_run_table() -> list[dict]:
+    from benchmarks.serve_paged_sweep import quant_budget_table
+    from repro.core.autotune_search import SPECS
+    from repro.kernels import quant
+
+    rows = []
+    for kernel in _ATTN:
+        spec = SPECS[kernel]
+        for shape in _shapes()[kernel]:
+            picks = {}
+            for dtype in (WIDE,) + quant.quant_dtypes():
+                bucket = spec.bucket(dtype=dtype, **shape)
+                cfg = spec.candidates(bucket)[0]   # the prior's pick
+                total, br = _modeled_total(kernel, bucket, cfg)
+                picks[dtype] = br
+                rows.append({
+                    "table": TABLE, "mode": "modeled", "kernel": kernel,
+                    "shape": ";".join(f"{k}={v}"
+                                      for k, v in sorted(shape.items())),
+                    "dtype": dtype, "config": ";".join(
+                        f"{k}={v}" for k, v in sorted(cfg.items())),
+                    "dma_s": br["dma_s"], "compute_s": br["compute_s"],
+                    "stall_s": br["stall_s"], "modeled_s": total,
+                })
+            eps = 1 + 1e-9
+            for qd in quant.quant_dtypes():
+                assert picks[qd]["dma_s"] <= picks[WIDE]["dma_s"] * eps, (
+                    f"{kernel}: {qd} pick moves {picks[qd]['dma_s']:.3e}s "
+                    f"of DMA vs {picks[WIDE]['dma_s']:.3e}s for {WIDE} — "
+                    f"the quantized path lost the bytes it exists to save")
+                assert (picks[qd]["compute_s"]
+                        <= picks[WIDE]["compute_s"] * eps), (
+                    f"{kernel}: {qd} pick models more compute than {WIDE}")
+    # the serving-side half of the invariant: same byte budget, >= 1.8x
+    # sequences in flight (hard-asserted inside quant_budget_table)
+    rows += [dict(r, table=TABLE) for r in quant_budget_table()]
+    return rows
+
+
+def sweep_table() -> list[dict]:
+    from repro.core import autotune_search
+    from repro.core.autotune_search import (SearchOptions, TuningDB,
+                                            measurement_count)
+    from repro.kernels import quant
+
+    db = TuningDB()  # memory-only: a benchmark must not pollute results/
+    opts = SearchOptions(top_k=4, warmup=1, reps=2)
+    rows = []
+    for kernel, shapes in _shapes().items():
+        for shape in shapes:
+            wide_s = None
+            for dtype in (WIDE,) + quant.quant_dtypes():
+                res = autotune_search.search_kernel(
+                    kernel, db=db, options=opts, dtype=dtype, **shape)
+                if dtype == WIDE:
+                    wide_s = res.measured_s
+                before = measurement_count()
+                warm = autotune_search.lookup_or_search(
+                    kernel, db=db, dtype=dtype, **shape)
+                assert measurement_count() == before, (
+                    f"{kernel}/{dtype}: warm db lookup performed timed "
+                    f"measurements")
+                assert warm == res.config, (kernel, dtype, warm, res.config)
+                rows.append({
+                    "table": TABLE, "mode": "measured", "kernel": kernel,
+                    "shape": ";".join(f"{k}={v}"
+                                      for k, v in sorted(shape.items())),
+                    "dtype": dtype, "config": ";".join(
+                        f"{k}={v}" for k, v in sorted(res.config.items())),
+                    "measured_s": res.measured_s,
+                    "analytic_s": res.analytic_s,
+                    "speedup_vs_analytic": res.speedup,
+                    "vs_wide": res.measured_s / max(wide_s, 1e-12),
+                    "n_timed": res.n_timed,
+                })
+    return rows
+
+
+ALL = [sweep_table]
+QUICK = [dry_run_table]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="modeled DMA/concurrency invariants, no kernels")
+    args = ap.parse_args()
+    rows = dry_run_table() if args.dry_run else sweep_table()
+    keys = sorted({k for r in rows for k in r})
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+
+
+if __name__ == "__main__":
+    main()

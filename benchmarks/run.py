@@ -38,16 +38,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="sim | cost | taskflow | sched | serve | paged "
-                         "| device | roofline | calib | kautotune")
+                         "| device | roofline | calib | kautotune | quant")
     ap.add_argument("--quick", action="store_true",
                     help="run each suite's QUICK subset (CI smoke)")
     args = ap.parse_args()
 
     from benchmarks import (calibration_sweep, cost_model_bench,
                             device_knobs, dryrun_summary,
-                            kernel_autotune_sweep, scheduler_sweep,
-                            serve_admission_sweep, serve_paged_sweep,
-                            sim_tables, taskflow_compare)
+                            kernel_autotune_sweep, quant_sweep,
+                            scheduler_sweep, serve_admission_sweep,
+                            serve_paged_sweep, sim_tables,
+                            taskflow_compare)
 
     mods = {
         "sim": sim_tables,
@@ -60,6 +61,7 @@ def main() -> None:
         "roofline": dryrun_summary,
         "calib": calibration_sweep,
         "kautotune": kernel_autotune_sweep,
+        "quant": quant_sweep,
     }
     suites = {name: (getattr(m, "QUICK", m.ALL) if args.quick else m.ALL)
               for name, m in mods.items()}

@@ -21,6 +21,14 @@ zero-recompute invariant are exercised — and hard-asserted — without a
 forward pass.  The allocator's claim loop runs under every registered
 scheduler, mapping the paper's shared-vs-local FAA tradeoff onto page
 allocation.
+
+A third table (``quant_budget_table``) holds the page-pool *byte* budget
+constant and re-derives the pool size per KV storage dtype from the real
+model cache shapes (``jax.eval_shape`` — no forward pass): int8 pages
+hold half the bytes of bf16 ones plus an f16 scale per head-vector, so
+the same budget admits more pages and therefore more concurrent
+sequences.  The >= 1.8x concurrency win over bf16 is hard-asserted —
+that is the acceptance line for the quantized KV cache.
 """
 
 from __future__ import annotations
@@ -230,6 +238,81 @@ def _assert_sweep_invariants(rows: list) -> None:
                 <= short_of["faa"]["page_faa_shared"])
 
 
+# -------------------------------------------------- quantized-KV budget
+
+def quant_budget_table(arch: str = "qwen2.5-3b") -> list[dict]:
+    """Concurrency at a fixed page-pool byte budget, per KV dtype.
+
+    Bytes per page come from the *real* paged cache shapes via
+    ``jax.eval_shape`` (the difference between an N-page and a 2N-page
+    pool isolates per-page bytes, including the quantized layout's scale
+    sidecars).  The tick-clock simulation then runs the actual
+    :class:`PageAllocator` at each dtype's pool size and the peak
+    in-flight count must grow by >= 1.8x for int8 over bf16.
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.kernels import quant
+    from repro.models import Model
+
+    # head_dim >= 32 keeps the per-token byte win above the acceptance
+    # line: one f16 scale per D-wide int8 vector costs 2/(D+2) of it
+    # (kv_byte_ratio(32) = 64/34 ~ 1.88; the reduced() default of 16
+    # lands at 1.78)
+    cfg = dataclasses.replace(get_config(arch).reduced(), head_dim=32)
+    model = Model(cfg)
+
+    def bytes_per_page(dtype) -> float:
+        def total(num_pages: int) -> int:
+            tree = jax.eval_shape(
+                lambda: model.init_paged_cache(2, MAX_LEN, num_pages,
+                                               PAGE_SIZE, dtype))
+            return sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(tree))
+
+        n = 8
+        return (total(2 * n) - total(n)) / n
+
+    rng = np.random.RandomState(SEED + 2)
+    wide_bpp = bytes_per_page(np.dtype("bfloat16"))
+    budget_bytes = 24 * wide_bpp        # = 4 contiguous bf16 slots' bytes
+    rows, peaks, pages_of = [], {}, {}
+    for name in ("bfloat16",) + quant.quant_dtypes():
+        bpp = bytes_per_page(np.dtype(name))
+        num_pages = int(budget_bytes // bpp)
+        # every request spans 2 pages; saturate the pool to find its peak
+        workload = [(rng.randint(1, 256, 6).astype(np.int32), 6)
+                    for _ in range(num_pages)]
+        done, alloc, _, peak, ticks = _sim_paged(
+            workload, num_pages, slots=num_pages, schedule="faa",
+            prefix=False)
+        peaks[name], pages_of[name] = peak, num_pages
+        rows.append({
+            "table": TABLE, "backend": "sim", "mode": "paged-quant",
+            "schedule": "faa", "workload": "budget", "kv_dtype": name,
+            "bytes_per_page": int(bpp), "num_pages": num_pages,
+            "slots": num_pages, "peak_concurrent": peak, "ticks": ticks,
+            "deferrals": sum(r.deferred for r in done),
+            "peak_pages_live": alloc.peak_live,
+        })
+    # eval_shape byte accounting must agree with the closed-form ratio
+    model_ratio = wide_bpp / bytes_per_page(np.dtype("int8"))
+    closed = quant.kv_byte_ratio(32)
+    assert abs(model_ratio - closed) / closed < 0.01, (
+        f"paged-pool byte ratio {model_ratio:.3f} disagrees with "
+        f"kv_byte_ratio {closed:.3f} — a cache leaf is mis-sized")
+    ratio = peaks["int8"] / peaks["bfloat16"]
+    assert ratio >= 1.8, (
+        f"int8 KV admitted only {ratio:.2f}x the bf16 concurrency at a "
+        f"fixed byte budget ({peaks['int8']} vs {peaks['bfloat16']} "
+        f"in flight over {pages_of['int8']} vs {pages_of['bfloat16']} "
+        f"pages) — below the 1.8x acceptance line")
+    return rows
+
+
 # ------------------------------------------------------------- real model
 
 def model_table(arch: str = "qwen2.5-3b", max_new: int = 6) -> list[dict]:
@@ -269,6 +352,26 @@ def model_table(arch: str = "qwen2.5-3b", max_new: int = 6) -> list[dict]:
                for tick in range(rep.total_ticks + 1)]
     assert max(by_tick) > 2, "paged engine never beat 2-slot concurrency"
 
+    # quantized KV: paged and contiguous int8 engines must agree exactly
+    # (same numerics, different layout), tying the byte win to unchanged
+    # serving behavior
+    eng = Engine(model, params,
+                 ServeConfig(max_len=MAX_LEN, slots=2, kv_dtype="int8",
+                             refill_schedule="faa"))
+    ref8 = eng.serve(short, max_new)
+    rows.append({"table": TABLE, "backend": "model", "arch": arch,
+                 "workload": "short-int8", **eng.last_report.as_row()})
+    eng = Engine(model, params,
+                 ServeConfig(max_len=MAX_LEN, slots=8, cache="paged",
+                             page_size=PAGE_SIZE, num_pages=budget_pages,
+                             prefix_cache=False, refill_schedule="faa",
+                             kv_dtype="int8"))
+    outs8 = eng.serve(short, max_new)
+    for a, b in zip(ref8, outs8):
+        np.testing.assert_array_equal(a, b)
+    rows.append({"table": TABLE, "backend": "model", "arch": arch,
+                 "workload": "short-int8", **eng.last_report.as_row()})
+
     pre = [p for p, _ in prefix_workload(vocab=cfg.vocab_size)]
     eng = Engine(model, params,
                  ServeConfig(max_len=MAX_LEN, slots=4, cache="paged",
@@ -287,8 +390,8 @@ def sweep_table() -> list[dict]:
     return model_table()
 
 
-ALL = [sweep_table]
-QUICK = [dry_run_table]
+ALL = [sweep_table, quant_budget_table]
+QUICK = [dry_run_table, quant_budget_table]
 
 
 def main() -> None:
@@ -297,7 +400,8 @@ def main() -> None:
                     help="tick-clock pool simulation, no model forward")
     ap.add_argument("--arch", default="qwen2.5-3b")
     args = ap.parse_args()
-    rows = dry_run_table() if args.dry_run else model_table(args.arch)
+    rows = (dry_run_table() + quant_budget_table() if args.dry_run
+            else model_table(args.arch) + quant_budget_table(args.arch))
     keys = sorted({k for r in rows for k in r})
     print(",".join(keys))
     for r in rows:

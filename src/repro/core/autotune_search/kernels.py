@@ -36,9 +36,9 @@ import jax.numpy as jnp
 
 from repro.core import autotune
 
-__all__ = ["BUFFER_DEPTHS", "KernelSpec", "QUICK_SHAPES",
-           "REPRESENTATIVE_SHAPES", "SPECS", "backend_name",
-           "dma_compute_breakdown", "fmt_items"]
+__all__ = ["BUFFER_DEPTHS", "KernelSpec", "PAGE_SIZE_OPTIONS",
+           "QUICK_SHAPES", "REPRESENTATIVE_SHAPES", "SPECS",
+           "backend_name", "dma_compute_breakdown", "fmt_items"]
 
 
 def backend_name() -> str:
@@ -107,6 +107,13 @@ class KernelSpec:
     analytic: Callable[[dict], dict]        # classic closed-form fallback
 
     def bucket_key(self, shape: dict) -> str:
+        if "dtype" not in shape:
+            # every bucket carries the storage dtype: an int8 pool and a
+            # bf16 pool at the same extents are different kernels, and a
+            # key without the dtype would alias their winners
+            raise ValueError(
+                f"tuning bucket for {self.name!r} is missing 'dtype': "
+                f"{shape!r}")
         return fmt_items(shape)
 
     def analytic_config(self, **shape) -> dict:
@@ -134,6 +141,14 @@ def _dtype_bytes(shape: dict) -> int:
     return max(1, jnp.dtype(shape.get("dtype", "float32")).itemsize)
 
 
+def _quantized(shape: dict) -> bool:
+    """Whether this bucket's storage dtype routes to the quantized kernel
+    variants (int8 / fp8 values + per-vector scale sidecars)."""
+    from repro.kernels import quant  # lazy, same as the runner factories
+
+    return quant.is_quant_dtype(shape.get("dtype"))
+
+
 BUFFER_DEPTHS = (1, 2, 4)   # KV staging-ring depths the search sweeps
 
 
@@ -144,7 +159,7 @@ def _flash_candidates(shape: dict) -> list[dict]:
         dtype_bytes=_dtype_bytes(shape), overhead=_overhead_s(),
         align=align, buffer_depths=BUFFER_DEPTHS)
     classic = _flash_analytic(shape)
-    return _with_classic(
+    out = _with_classic(
         _dedupe([
             {"block_q": autotune.fit_block(shape["sq"], b.block_q),
              "block_k": autotune.fit_block(shape["skv"], b.block_k),
@@ -154,6 +169,12 @@ def _flash_candidates(shape: dict) -> list[dict]:
         {"block_q": autotune.fit_block(shape["sq"], classic["block_q"]),
          "block_k": autotune.fit_block(shape["skv"], classic["block_k"]),
          "num_buffers": 1})
+    if _quantized(shape):
+        # the quantized flash kernel has no staging-ring variant (the
+        # scale sidecars would need their own DMA streams); collapse the
+        # depth axis so the search never proposes a config the op can't run
+        out = _dedupe([{**c, "num_buffers": 1} for c in out])
+    return out
 
 
 def _flash_analytic(shape: dict) -> dict:
@@ -171,10 +192,36 @@ def _flash_runner_factory(shape: dict):
 
     dtype = jnp.dtype(shape["dtype"])
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    interpret = not _on_tpu()
+    if _quantized(shape):
+        from repro.kernels import quant
+        from repro.kernels.flash_attention.kernel import (
+            flash_attention_fwd_quantized)
+
+        q = jax.random.normal(ks[0], (1, shape["sq"], 1, shape["d"]))
+        kf = jax.random.normal(ks[1], (1, shape["skv"], 1, shape["d"]))
+        vf = jax.random.normal(ks[2], (1, shape["skv"], 1, shape["d"]))
+        k_q, k_s = quant.quantize(kf, dtype=dtype,
+                                  scale_dtype=quant.SCALE_DTYPE)
+        v_q, v_s = quant.quantize(vf, dtype=dtype,
+                                  scale_dtype=quant.SCALE_DTYPE)
+
+        def make_quant(config: dict) -> Callable[[], None]:
+            fn = jax.jit(functools.partial(
+                flash_attention_fwd_quantized, causal=bool(shape["causal"]),
+                block_q=config["block_q"], block_k=config["block_k"],
+                interpret=interpret))
+
+            def run() -> None:
+                jax.block_until_ready(fn(q, k_q, k_s, v_q, v_s))
+
+            return run
+
+        return make_quant
+
     q = jax.random.normal(ks[0], (1, shape["sq"], 1, shape["d"]), dtype)
     k = jax.random.normal(ks[1], (1, shape["skv"], 1, shape["d"]), dtype)
     v = jax.random.normal(ks[2], (1, shape["skv"], 1, shape["d"]), dtype)
-    interpret = not _on_tpu()
 
     def make(config: dict) -> Callable[[], None]:
         nb = int(config.get("num_buffers", 1))
@@ -212,13 +259,17 @@ def _decode_candidates(shape: dict) -> list[dict]:
         combine_overhead=_overhead_s(), min_rows_per_split=min_rows,
         buffer_depths=BUFFER_DEPTHS)
     classic = _decode_analytic(shape)
-    return _with_classic(
+    out = _with_classic(
         _dedupe([{"num_splits": autotune.fit_block(shape["s"], ns),
                   "num_buffers": nb}
                  for ns, nb in pairs]),
         {"num_splits": autotune.fit_block(shape["s"],
                                           classic["num_splits"]),
          "num_buffers": 1})
+    if _quantized(shape):
+        # quantized dense decode is classic-only, like quantized flash
+        out = _dedupe([{**c, "num_buffers": 1} for c in out])
+    return out
 
 
 def _decode_analytic(shape: dict) -> dict:
@@ -232,11 +283,36 @@ def _decode_runner_factory(shape: dict):
 
     dtype = jnp.dtype(shape["dtype"])
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    kv_len = jnp.full((1,), shape["s"], jnp.int32)
+    interpret = not _on_tpu()
+    if _quantized(shape):
+        from repro.kernels import quant
+        from repro.kernels.decode_attention.kernel import (
+            decode_attention_fwd_quantized)
+
+        q = jax.random.normal(ks[0], (1, 1, shape["d"]))
+        kf = jax.random.normal(ks[1], (1, shape["s"], 1, shape["d"]))
+        vf = jax.random.normal(ks[2], (1, shape["s"], 1, shape["d"]))
+        k_q, k_s = quant.quantize(kf, dtype=dtype,
+                                  scale_dtype=quant.SCALE_DTYPE)
+        v_q, v_s = quant.quantize(vf, dtype=dtype,
+                                  scale_dtype=quant.SCALE_DTYPE)
+
+        def make_quant(config: dict) -> Callable[[], None]:
+            fn = jax.jit(functools.partial(
+                decode_attention_fwd_quantized,
+                num_splits=config["num_splits"], interpret=interpret))
+
+            def run() -> None:
+                jax.block_until_ready(fn(q, k_q, k_s, v_q, v_s, kv_len))
+
+            return run
+
+        return make_quant
+
     q = jax.random.normal(ks[0], (1, 1, shape["d"]), dtype)
     k = jax.random.normal(ks[1], (1, shape["s"], 1, shape["d"]), dtype)
     v = jax.random.normal(ks[2], (1, shape["s"], 1, shape["d"]), dtype)
-    kv_len = jnp.full((1,), shape["s"], jnp.int32)
-    interpret = not _on_tpu()
 
     def make(config: dict) -> Callable[[], None]:
         nb = int(config.get("num_buffers", 1))
@@ -266,53 +342,100 @@ def _paged_decode_bucket(*, s: int, page_size: int, d: int,
                          dtype: str = "float32") -> dict:
     # page_size is IN the bucket: the page is the kernel's DMA block, so
     # two pools with equal total rows but different page sizes are
-    # different kernels — a bucket without it aliases their winners
+    # different kernels — a bucket without it aliases their winners.
+    # page_size=0 is the *open* sentinel bucket: the caller has not fixed
+    # a pool layout yet, so the search sweeps page_size itself and the
+    # winning config carries the picked value (ServeConfig(page_size=None)
+    # resolves through this bucket).
     return {"s": _pow2_bucket(s), "page_size": int(page_size),
             "d": int(d), "dtype": str(dtype)}
 
 
+PAGE_SIZE_OPTIONS = (8, 16, 32, 64, 128)  # swept by the page_size=0 bucket
+
+
 def _paged_decode_candidates(shape: dict) -> list[dict]:
-    page_bytes = 2 * shape["page_size"] * shape["d"] * _dtype_bytes(shape)
-    depths = [nb for nb in BUFFER_DEPTHS
-              if autotune.fit_buffer_depth(nb, page_bytes) == nb]
+    sweep_ps = not shape["page_size"]
+    ps_options = ([p for p in PAGE_SIZE_OPTIONS if p <= shape["s"]]
+                  if sweep_ps else [shape["page_size"]])
+    out = []
+    for ps in ps_options:
+        page_bytes = 2 * ps * shape["d"] * _dtype_bytes(shape)
+        for nb in BUFFER_DEPTHS:
+            if autotune.fit_buffer_depth(nb, page_bytes) != nb:
+                continue
+            cfg = {"num_buffers": nb}
+            if sweep_ps:
+                cfg["page_size"] = ps
+            out.append(cfg)
     classic = _paged_decode_analytic(shape)
-    return _with_classic(
-        _dedupe([{"num_buffers": nb} for nb in depths]), classic)
+    return _with_classic(_dedupe(out), classic)
 
 
 def _paged_decode_analytic(shape: dict) -> dict:
-    # the classic paged kernel: one grid step per page, depth fixed at 1
+    # the classic paged kernel: one grid step per page, depth fixed at 1;
+    # the open bucket's fallback also pins the pre-search page size
+    if not shape["page_size"]:
+        return {"page_size": min(16, shape["s"]), "num_buffers": 1}
     return {"num_buffers": 1}
 
 
 def _paged_decode_runner_factory(shape: dict):
-    from repro.kernels.decode_attention.kernel import (
-        paged_decode_attention_fwd, paged_decode_attention_fwd_pipelined)
+    from repro.kernels.decode_attention import kernel as dk
 
     dtype = jnp.dtype(shape["dtype"])
-    ps = shape["page_size"]
-    pages = max(1, shape["s"] // ps)
+    quantized = _quantized(shape)
+    if quantized:
+        from repro.kernels import quant
     ks = jax.random.split(jax.random.PRNGKey(4), 3)
-    q = jax.random.normal(ks[0], (1, 1, shape["d"]), dtype)
-    k_pool = jax.random.normal(ks[1], (pages + 1, ps, 1, shape["d"]), dtype)
-    v_pool = jax.random.normal(ks[2], (pages + 1, ps, 1, shape["d"]), dtype)
-    # pool row 0 is the serve engine's scratch page — never referenced
-    page_table = jnp.arange(1, pages + 1, dtype=jnp.int32)[None, :]
-    kv_len = jnp.full((1,), pages * ps, jnp.int32)
+    q = jax.random.normal(ks[0], (1, 1, shape["d"]),
+                          jnp.float32 if quantized else dtype)
     interpret = not _on_tpu()
 
+    def build(ps: int) -> tuple:
+        pages = max(1, shape["s"] // ps)
+        kf = jax.random.normal(ks[1], (pages + 1, ps, 1, shape["d"]))
+        vf = jax.random.normal(ks[2], (pages + 1, ps, 1, shape["d"]))
+        # pool row 0 is the serve engine's scratch page — never referenced
+        page_table = jnp.arange(1, pages + 1, dtype=jnp.int32)[None, :]
+        kv_len = jnp.full((1,), pages * ps, jnp.int32)
+        if quantized:
+            k_q, k_s = quant.quantize(kf, dtype=dtype,
+                                      scale_dtype=quant.SCALE_DTYPE)
+            v_q, v_s = quant.quantize(vf, dtype=dtype,
+                                      scale_dtype=quant.SCALE_DTYPE)
+            return (q, k_q, k_s, v_q, v_s, page_table, kv_len)
+        return (q, kf.astype(dtype), vf.astype(dtype), page_table, kv_len)
+
+    # the open (page_size=0) bucket rebuilds the pools per candidate —
+    # the page size under test IS part of the input layout
+    pools: dict[int, tuple] = {}
+
     def make(config: dict) -> Callable[[], None]:
+        ps = int(config.get("page_size") or shape["page_size"])
+        if ps not in pools:
+            pools[ps] = build(ps)
+        args = pools[ps]
         nb = int(config.get("num_buffers", 1))
-        if nb > 1:
+        if quantized:
+            if nb > 1:
+                fn = jax.jit(functools.partial(
+                    dk.paged_decode_attention_fwd_quantized_pipelined,
+                    num_buffers=nb, interpret=interpret))
+            else:
+                fn = jax.jit(functools.partial(
+                    dk.paged_decode_attention_fwd_quantized,
+                    interpret=interpret))
+        elif nb > 1:
             fn = jax.jit(functools.partial(
-                paged_decode_attention_fwd_pipelined, num_buffers=nb,
+                dk.paged_decode_attention_fwd_pipelined, num_buffers=nb,
                 interpret=interpret))
         else:
             fn = jax.jit(functools.partial(
-                paged_decode_attention_fwd, interpret=interpret))
+                dk.paged_decode_attention_fwd, interpret=interpret))
 
         def run() -> None:
-            jax.block_until_ready(fn(q, k_pool, v_pool, page_table, kv_len))
+            jax.block_until_ready(fn(*args))
 
         return run
 
@@ -357,9 +480,32 @@ def _gmm_runner_factory(shape: dict):
 
     dtype = jnp.dtype(shape["dtype"])
     ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    interpret = not _on_tpu()
+    if _quantized(shape):
+        from repro.kernels import quant
+        from repro.kernels.moe_gmm.kernel import gmm_quantized
+
+        x = jax.random.normal(ks[0], (1, shape["c"], shape["d"]))
+        wf = jax.random.normal(ks[1], (1, shape["d"], shape["f"]))
+        # weights quantize per (expert, output-column): axis=1 is the
+        # contraction axis, so the scale factors out of the dot exactly
+        w_q, w_s = quant.quantize(wf, dtype=dtype, axis=1)
+
+        def make_quant(config: dict) -> Callable[[], None]:
+            fn = jax.jit(functools.partial(
+                gmm_quantized, block_c=config["block_c"],
+                block_f=config["block_f"], block_d=config["block_d"],
+                interpret=interpret))
+
+            def run() -> None:
+                jax.block_until_ready(fn(x, w_q, w_s))
+
+            return run
+
+        return make_quant
+
     x = jax.random.normal(ks[0], (1, shape["c"], shape["d"]), dtype)
     w = jax.random.normal(ks[1], (1, shape["d"], shape["f"]), dtype)
-    interpret = not _on_tpu()
 
     def make(config: dict) -> Callable[[], None]:
         fn = jax.jit(functools.partial(
@@ -405,13 +551,34 @@ def _ssd_runner_factory(shape: dict):
     from repro.kernels.mamba_ssd.kernel import ssd_fwd
 
     dtype = jnp.dtype(shape["dtype"])
+    quantized = _quantized(shape)
     ks = jax.random.split(jax.random.PRNGKey(3), 5)
-    x = jax.random.normal(ks[0], (1, shape["s"], 1, shape["p"]), dtype)
+    xdt = jnp.float32 if quantized else dtype
+    bdt = jnp.float32 if quantized else dtype
+    x = jax.random.normal(ks[0], (1, shape["s"], 1, shape["p"]), xdt)
     dt = jax.nn.softplus(jax.random.normal(ks[1], (1, shape["s"], 1)))
     a = -jnp.exp(jax.random.normal(ks[2], (1,)))
-    b_in = jax.random.normal(ks[3], (1, shape["s"], 1, shape["n"]), dtype)
-    c_in = jax.random.normal(ks[4], (1, shape["s"], 1, shape["n"]), dtype)
+    b_in = jax.random.normal(ks[3], (1, shape["s"], 1, shape["n"]), bdt)
+    c_in = jax.random.normal(ks[4], (1, shape["s"], 1, shape["n"]), bdt)
     interpret = not _on_tpu()
+    if quantized:
+        from repro.kernels import quant
+        from repro.kernels.mamba_ssd.kernel import ssd_fwd_quantized
+
+        x_q, x_s = quant.quantize(x, dtype=dtype,
+                                  scale_dtype=quant.SCALE_DTYPE)
+
+        def make_quant(config: dict) -> Callable[[], None]:
+            fn = jax.jit(functools.partial(
+                ssd_fwd_quantized, chunk=config["chunk"],
+                interpret=interpret))
+
+            def run() -> None:
+                jax.block_until_ready(fn(x_q, x_s, dt, a, b_in, c_in))
+
+            return run
+
+        return make_quant
 
     def make(config: dict) -> Callable[[], None]:
         fn = jax.jit(functools.partial(

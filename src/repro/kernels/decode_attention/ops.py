@@ -18,7 +18,10 @@ import jax
 from repro.core import autotune, autotune_search
 from repro.kernels.decode_attention.kernel import (
     decode_attention_fwd, decode_attention_fwd_pipelined,
-    paged_decode_attention_fwd, paged_decode_attention_fwd_pipelined)
+    decode_attention_fwd_quantized, paged_decode_attention_fwd,
+    paged_decode_attention_fwd_pipelined,
+    paged_decode_attention_fwd_quantized,
+    paged_decode_attention_fwd_quantized_pipelined)
 
 
 _decode_jit = jax.jit(decode_attention_fwd,
@@ -26,10 +29,17 @@ _decode_jit = jax.jit(decode_attention_fwd,
 _decode_pipe_jit = jax.jit(
     decode_attention_fwd_pipelined,
     static_argnames=("num_splits", "num_buffers", "vmem_limit", "interpret"))
+_decode_quant_jit = jax.jit(decode_attention_fwd_quantized,
+                            static_argnames=("num_splits", "interpret"))
 _paged_jit = jax.jit(paged_decode_attention_fwd,
                      static_argnames=("interpret",))
 _paged_pipe_jit = jax.jit(
     paged_decode_attention_fwd_pipelined,
+    static_argnames=("num_buffers", "vmem_limit", "interpret"))
+_paged_quant_jit = jax.jit(paged_decode_attention_fwd_quantized,
+                           static_argnames=("interpret",))
+_paged_quant_pipe_jit = jax.jit(
+    paged_decode_attention_fwd_quantized_pipelined,
     static_argnames=("num_buffers", "vmem_limit", "interpret"))
 
 
@@ -106,3 +116,67 @@ def paged_decode_attention(
                                vmem_limit=vmem_limit, interpret=interpret)
     return _paged_jit(q, k_pool, v_pool, page_table, kv_len,
                       interpret=interpret)
+
+
+def decode_attention_quantized(
+    q: jax.Array,        # [B, Hq, D]
+    k_q: jax.Array,      # [B, S, Hkv, D] int8/fp8
+    k_scale: jax.Array,  # [B, S, Hkv, 1]
+    v_q: jax.Array,
+    v_scale: jax.Array,
+    kv_len: jax.Array,   # [B] int32
+    *,
+    num_splits: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash-decode over a quantized contiguous cache (per-row scales).
+
+    The split count resolves under the *storage* dtype's bucket
+    (``dtype=k_q.dtype.name``): the DMA term halves at int8, so the
+    measured optimum can differ from the bf16 pick for the same shape."""
+    s = k_q.shape[1]
+    d = q.shape[-1]
+    if num_splits is None:
+        cfg = autotune_search.lookup_or_search(
+            "decode_attention", s=s, d=d, dtype=k_q.dtype.name)
+        num_splits = cfg["num_splits"]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _decode_quant_jit(q, k_q, k_scale, v_q, v_scale, kv_len,
+                             num_splits=num_splits, interpret=interpret)
+
+
+def paged_decode_attention_quantized(
+    q: jax.Array,           # [B, Hq, D]
+    k_pool: jax.Array,      # [Np, ps, Hkv, D] int8/fp8
+    k_scale: jax.Array,     # [Np, ps, Hkv, 1]
+    v_pool: jax.Array,
+    v_scale: jax.Array,
+    page_table: jax.Array,  # [B, P] int32
+    kv_len: jax.Array,      # [B] int32
+    *,
+    num_buffers: Optional[int] = None,
+    vmem_limit: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash-decode against a quantized page pool (value pages + per-row
+    scale pages).  Same bucket discipline as the float paged op, keyed on
+    the storage dtype so quantized and bf16 winners never alias."""
+    ps = k_pool.shape[1]
+    pages = page_table.shape[1]
+    d = q.shape[-1]
+    if num_buffers is None:
+        cfg = autotune_search.lookup_or_search(
+            "paged_decode_attention", s=pages * ps, page_size=ps, d=d,
+            dtype=k_pool.dtype.name)
+        num_buffers = int(cfg.get("num_buffers", 1))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    num_buffers = _fit_depth(num_buffers, ps, d, k_pool.dtype, vmem_limit)
+    if num_buffers > 1:
+        return _paged_quant_pipe_jit(
+            q, k_pool, k_scale, v_pool, v_scale, page_table, kv_len,
+            num_buffers=num_buffers, vmem_limit=vmem_limit,
+            interpret=interpret)
+    return _paged_quant_jit(q, k_pool, k_scale, v_pool, v_scale,
+                            page_table, kv_len, interpret=interpret)

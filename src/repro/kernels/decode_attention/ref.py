@@ -32,3 +32,30 @@ def paged_decode_attention_ref(q, k_pool, v_pool, page_table, kv_len):
     k = k_pool[page_table].reshape(b, pages * ps, *k_pool.shape[2:])
     v = v_pool[page_table].reshape(b, pages * ps, *v_pool.shape[2:])
     return decode_attention_ref(q, k, v, kv_len)
+
+
+def decode_attention_quant_ref(q, k_q, k_scale, v_q, v_scale, kv_len):
+    """Dequantize-then-attend oracle for the quantized decode kernels."""
+    from repro.kernels import quant
+
+    k = quant.dequantize(k_q, k_scale)
+    v = quant.dequantize(v_q, v_scale)
+    return decode_attention_ref(q, k, v, kv_len)
+
+
+def paged_decode_attention_quant_ref(q, k_pool, k_scale, v_pool, v_scale,
+                                     page_table, kv_len):
+    """Quantized paged oracle: gather values AND scales through the page
+    table, dequantize, run the dense reference."""
+    from repro.kernels import quant
+
+    b = q.shape[0]
+    ps = k_pool.shape[1]
+    pages = page_table.shape[1]
+    k_q = k_pool[page_table].reshape(b, pages * ps, *k_pool.shape[2:])
+    v_q = v_pool[page_table].reshape(b, pages * ps, *v_pool.shape[2:])
+    ks = k_scale[page_table].reshape(b, pages * ps, *k_scale.shape[2:])
+    vs = v_scale[page_table].reshape(b, pages * ps, *v_scale.shape[2:])
+    k = quant.dequantize(k_q, ks)
+    v = quant.dequantize(v_q, vs)
+    return decode_attention_ref(q, k, v, kv_len)

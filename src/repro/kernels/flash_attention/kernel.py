@@ -305,6 +305,137 @@ def flash_attention_fwd_pipelined(
 
 
 # ---------------------------------------------------------------------------
+# Quantized forward: int8/fp8 K/V with per-(token, head) scales.
+#
+# K/V arrive as quantized values plus one scale per KV row; the kernel never
+# materializes the dequantized block.  The scale is constant along the
+# contraction axis, so it factors out of both matmuls: scores are
+# (q . k_q) * ks^T and the output accumulates (p * vs^T) . v_q — the MXU
+# sees narrow operands, the scales ride on the cheap elementwise side.
+# Same running-softmax state and block skipping as ``_fa_kernel``.
+# ---------------------------------------------------------------------------
+
+
+def _fa_quant_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref, lse_ref,
+                     acc_ref, m_ref, l_ref, *,
+                     causal: bool, sq: int, skv: int, bq: int, bk: int,
+                     nk: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = (j * bk <= i * bq + bq - 1 + (skv - sq)) if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)           # [bk, d] quantized
+        v = v_ref[0, 0].astype(jnp.float32)
+        ks = ks_ref[0, 0].astype(jnp.float32)         # [bk, 1]
+        vs = vs_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        # per-row K scale factors out of the contraction: apply to scores
+        s = s * ks.reshape(1, bk)
+        s = s * (1.0 / np.sqrt(q.shape[-1]))          # [bq, bk]
+
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0) + (skv - sq)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # [bq, bk]
+        corr = jnp.exp(m_prev - m_new)                 # [bq, 1]
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        # per-row V scale rides on p (elementwise) so the p @ v matmul
+        # keeps its narrow operand
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p * vs.reshape(1, bk), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_ref[...] + jnp.log(l)).astype(jnp.float32)
+
+
+def flash_attention_fwd_quantized(
+    q: jax.Array,        # [B, Sq, Hq, D]
+    k_q: jax.Array,      # [B, Skv, Hkv, D] int8/fp8
+    k_scale: jax.Array,  # [B, Skv, Hkv, 1]
+    v_q: jax.Array,
+    v_scale: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int,
+    block_k: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash forward over a quantized KV stream; output matches the
+    dequantized-f32 oracle to f32 rounding (the scale placement is exact
+    arithmetic, not an approximation).  Forward-only: the quantized cache
+    is an inference artifact, gradients flow through the float path."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k_q.shape[1], k_q.shape[2]
+    g = hq // hkv
+    bq, bk = min(block_q, sq), min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    nq, nk = sq // bq, skv // bk
+
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k_q.transpose(0, 2, 1, 3)
+    vt = v_q.transpose(0, 2, 1, 3)
+    kst = k_scale.transpose(0, 2, 1, 3)
+    vst = v_scale.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _fa_quant_kernel, causal=causal, sq=sq, skv=skv, bq=bq, bk=bk, nk=nk)
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, 1), lambda b_, h, i, j: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, 1), lambda b_, h, i, j: (b_, h // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h, i, j: (b_, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, sq, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_attention_fwd_quantized",
+    )(qt, kt, kst, vt, vst)
+    return out.transpose(0, 2, 1, 3), lse[..., 0]
+
+
+# ---------------------------------------------------------------------------
 # backward — standard flash recompute: dq kernel + dkv kernel
 # ---------------------------------------------------------------------------
 

@@ -20,7 +20,8 @@ import jax
 
 from repro.core import autotune, autotune_search
 from repro.kernels.flash_attention.kernel import (
-    flash_attention_bwd, flash_attention_fwd, flash_attention_fwd_pipelined)
+    flash_attention_bwd, flash_attention_fwd, flash_attention_fwd_pipelined,
+    flash_attention_fwd_quantized)
 
 
 def _on_tpu() -> bool:
@@ -131,3 +132,45 @@ def flash_attention(
         interpret = not _on_tpu()
     return _flash_jit(q, k, v, causal, block_q, block_k, num_buffers,
                       vmem_limit, interpret)
+
+
+_flash_quant_jit = jax.jit(
+    flash_attention_fwd_quantized,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+
+
+def flash_attention_quantized(
+    q: jax.Array,        # [B, Sq, Hq, D]
+    k_q: jax.Array,      # [B, Skv, Hkv, D] int8/fp8
+    k_scale: jax.Array,  # [B, Skv, Hkv, 1]
+    v_q: jax.Array,
+    v_scale: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash attention over a quantized KV stream (per-token/head scales).
+
+    Block sizes resolve through the same tuning db as the float op, under
+    the *storage* dtype's bucket (``dtype=k_q.dtype.name``) — quantized
+    and float configs never alias, and the db's winner reflects the
+    halved KV bytes in its VMEM feasibility.  Forward-only.
+    """
+    b, sq, hq, d = q.shape
+    skv = k_q.shape[1]
+    if block_q is None or block_k is None:
+        cfg = autotune_search.lookup_or_search(
+            "flash_attention", sq=sq, skv=skv, d=d, dtype=k_q.dtype.name,
+            causal=causal)
+        block_q = block_q or max(8, min(cfg["block_q"], sq))
+        block_k = block_k or max(8, min(cfg["block_k"], skv))
+    block_q = autotune.fit_block(sq, block_q)
+    block_k = autotune.fit_block(skv, block_k)
+    if interpret is None:
+        interpret = not _on_tpu()
+    out, _ = _flash_quant_jit(q, k_q, k_scale, v_q, v_scale, causal=causal,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return out

@@ -22,3 +22,16 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
     return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def flash_attention_quant_ref(q, k_q, k_scale, v_q, v_scale, *,
+                              causal: bool = True):
+    """Scale-aware oracle for the quantized kernel: dequantize K/V to f32
+    and run the float reference — the kernel must match THIS to f32
+    rounding; distance to the unquantized reference is governed by the
+    quantization error bound (repro.kernels.quant.max_abs_error)."""
+    from repro.kernels import quant
+
+    k = quant.dequantize(k_q, k_scale)
+    v = quant.dequantize(v_q, v_scale)
+    return flash_attention_ref(q, k, v, causal=causal)

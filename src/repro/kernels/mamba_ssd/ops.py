@@ -8,9 +8,11 @@ from typing import Optional
 import jax
 
 from repro.core import autotune_search
-from repro.kernels.mamba_ssd.kernel import ssd_fwd
+from repro.kernels.mamba_ssd.kernel import ssd_fwd, ssd_fwd_quantized
 
 _ssd_jit = jax.jit(ssd_fwd, static_argnames=("chunk", "interpret"))
+_ssd_quant_jit = jax.jit(ssd_fwd_quantized,
+                         static_argnames=("chunk", "interpret"))
 
 
 def ssd(
@@ -32,3 +34,29 @@ def ssd(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return _ssd_jit(x, dt, a, b_in, c_in, chunk=chunk, interpret=interpret)
+
+
+def ssd_quantized(
+    x_q: jax.Array,      # [B, S, H, P] int8/fp8
+    x_scale: jax.Array,  # [B, S, H, 1]
+    dt: jax.Array,       # [B, S, H]
+    a: jax.Array,        # [H]
+    b_in: jax.Array,     # [B, S, G, N]
+    c_in: jax.Array,
+    *,
+    chunk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+):
+    """SSD over a quantized activation stream (per-token/head scales).
+    The chunk length resolves under the storage dtype's bucket — the x
+    stream is the widest DMA, so halving its bytes moves the tuned
+    chunk/handoff trade-off."""
+    if chunk is None:
+        cfg = autotune_search.lookup_or_search(
+            "mamba_ssd", s=x_q.shape[1], p=x_q.shape[-1], n=b_in.shape[-1],
+            dtype=x_q.dtype.name)
+        chunk = cfg["chunk"]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _ssd_quant_jit(x_q, x_scale, dt, a, b_in, c_in, chunk=chunk,
+                          interpret=interpret)

@@ -42,3 +42,14 @@ def ssd_ref(x, dt, a, b_in, c_in, initial_state=None):
          bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3)))
     y = ys.transpose(1, 0, 2, 3)
     return y.astype(x.dtype), final
+
+
+def ssd_quant_ref(x_q, x_scale, dt, a, b_in, c_in, initial_state=None):
+    """Dequantize-then-scan oracle for the quantized SSD kernel.  Returns
+    y in b_in's dtype (the quantized kernel's wide output dtype)."""
+    from repro.kernels import quant
+
+    x = quant.dequantize(x_q, x_scale)
+    y, final = ssd_ref(x.astype(b_in.dtype), dt, a, b_in, c_in,
+                       initial_state=initial_state)
+    return y, final

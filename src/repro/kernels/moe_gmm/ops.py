@@ -13,11 +13,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import autotune_search
-from repro.kernels.moe_gmm.kernel import gmm
+from repro.kernels import quant
+from repro.kernels.moe_gmm.kernel import gmm, gmm_quantized
 
 
 _gmm_jit = jax.jit(
     gmm, static_argnames=("block_c", "block_f", "block_d", "interpret"))
+_gmm_quant_jit = jax.jit(
+    gmm_quantized,
+    static_argnames=("block_c", "block_f", "block_d", "interpret"))
 
 
 def _tiles(c: int, d: int, f: int, dtype: str) -> tuple[int, int, int]:
@@ -35,6 +39,31 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *,
     bc, bf, bd = _tiles(x.shape[1], x.shape[2], w.shape[2], x.dtype.name)
     return _gmm_jit(x, w, block_c=bc, block_f=bf, block_d=bd,
                     interpret=interpret)
+
+
+def quantize_expert_weights(w: jax.Array, *, dtype=jnp.int8):
+    """[E, d, f] expert weights -> (w_q, w_scale [E, 1, f]).
+
+    One scale per (expert, output column): constant along the contraction
+    axis d, so the kernel dequantizes exactly by scaling the finished
+    accumulator."""
+    return quant.quantize(w, dtype=dtype, axis=1)
+
+
+def grouped_matmul_quantized(x: jax.Array, w_q: jax.Array,
+                             w_scale: jax.Array, *,
+                             interpret: Optional[bool] = None) -> jax.Array:
+    """x [E, C, d] @ dequant(w_q, w_scale) [E, d, f] -> [E, C, f].
+
+    Tiles resolve under the storage dtype's bucket: int8 weight tiles
+    move half the bytes, so the VMEM-feasible frontier (and the measured
+    winner) differs from the bf16 pick."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bc, bf, bd = _tiles(x.shape[1], x.shape[2], w_q.shape[2],
+                        w_q.dtype.name)
+    return _gmm_quant_jit(x, w_q, w_scale, block_c=bc, block_f=bf,
+                          block_d=bd, interpret=interpret)
 
 
 @functools.partial(

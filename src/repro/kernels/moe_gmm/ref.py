@@ -9,6 +9,13 @@ def gmm_ref(x, w):
                       w.astype(jnp.float32)).astype(x.dtype)
 
 
+def gmm_quant_ref(x, w_q, w_scale):
+    """Dequantize-then-matmul oracle for the quantized grouped matmul."""
+    from repro.kernels import quant
+
+    return gmm_ref(x, quant.dequantize(w_q, w_scale))
+
+
 def expert_ffn_ref(x, gate, up, down):
     """Gated expert FFN on capacity buffers (the MoE hot loop)."""
     h = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),

@@ -1,0 +1,143 @@
+"""Symmetric per-vector quantization for weights and KV caches.
+
+The paper's cost model splits a block's cost into a DMA term (bytes moved)
+and a compute term; quantization attacks the DMA term only — an int8 KV
+block moves half the bytes of a bf16 one, so the DMA/compute balance PR 7
+made tunable shifts, and the measured autotuner (not this module) decides
+where that shift actually wins.  This module owns the numerics:
+
+* ``quantize(x, axis=-1)`` — symmetric per-vector quantization: each
+  vector along ``axis`` (a KV token's head slice, an expert weight
+  column) gets one scale ``max|x| / qmax`` and the values round to the
+  target dtype.  Per-vector granularity keeps dequantization exact in
+  the matmul: a scale constant along the contraction axis factors out of
+  the dot product, so ``(q . w_q) * scale == q . (w_q * scale)`` in
+  exact arithmetic.
+* ``dequantize(q, scale)`` — f32 reconstruction, the reference path every
+  quantized kernel is tested against.
+* Error bound: int8 rounding error per element is at most ``scale / 2``;
+  scales stored as float16 (``SCALE_DTYPE``, to keep cache bytes down)
+  add a relative ``2**-11`` on top.  ``max_abs_error`` returns the
+  per-vector bound the property tests assert.
+
+fp8 (``float8_e4m3fn``) rides the same API where the installed jax
+exposes the dtype — :func:`supports_fp8` gates it, nothing here imports
+it unconditionally.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SCALE_DTYPE",
+    "dequantize",
+    "is_quant_dtype",
+    "kv_byte_ratio",
+    "max_abs_error",
+    "quant_dtypes",
+    "quantize",
+    "supports_fp8",
+]
+
+# cache scales are stored half-width: a [*, 1] f32 scale per D-wide int8
+# vector would claw back 4/D of the byte win; f16 halves that and its
+# 2**-11 relative rounding is far below the int8 step itself
+SCALE_DTYPE = jnp.float16
+
+_QMAX = {"int8": 127.0, "float8_e4m3fn": 448.0}
+
+
+def supports_fp8() -> bool:
+    """Whether the installed jax exposes float8_e4m3fn."""
+    return hasattr(jnp, "float8_e4m3fn")
+
+
+def quant_dtypes() -> Tuple[str, ...]:
+    """Quantized storage dtypes available on this install, int8 first."""
+    return ("int8", "float8_e4m3fn") if supports_fp8() else ("int8",)
+
+
+def is_quant_dtype(dtype) -> bool:
+    """True for dtypes this module quantizes to (int8 / supported fp8)."""
+    if dtype is None:
+        return False
+    try:
+        name = jnp.dtype(dtype).name
+    except TypeError:
+        return False
+    return name in quant_dtypes()
+
+
+def quantize(
+    x: jax.Array,
+    *,
+    dtype=jnp.int8,
+    axis: int = -1,
+    scale_dtype: Optional[jnp.dtype] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-vector quantization along ``axis``.
+
+    Returns ``(q, scale)`` with ``scale = max|x| / qmax`` (keepdims, so
+    ``q * scale`` broadcasts back).  ``scale_dtype`` defaults to f32;
+    pass :data:`SCALE_DTYPE` for cache storage — the scale is rounded
+    *before* use so quantize/dequantize stay consistent with what a
+    cache actually holds.
+    """
+    name = jnp.dtype(dtype).name
+    if name not in _QMAX:
+        raise ValueError(f"unsupported quantized dtype {name!r} "
+                         f"(expected one of {sorted(_QMAX)})")
+    if name != "int8" and not supports_fp8():
+        raise ValueError(f"{name} requested but this jax has no fp8 dtypes")
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / _QMAX[name]
+    if scale_dtype is not None:
+        # a narrow stored scale underflows for vectors whose amax sits
+        # below qmax * (smallest subnormal) — clamp to the smallest
+        # normal so dequantize stays finite; such values just round to
+        # zero, which the 0.5*scale term of max_abs_error already covers
+        scale = jnp.maximum(scale.astype(scale_dtype),
+                            jnp.finfo(scale_dtype).tiny)
+    y = xf / scale.astype(jnp.float32)
+    if name == "int8":
+        q = jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8)
+    else:
+        q = y.astype(jnp.float8_e4m3fn)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """f32 reconstruction ``q * scale`` — the oracle the kernels chase."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)
+
+
+def max_abs_error(scale: jax.Array, amax: jax.Array, dtype=jnp.int8):
+    """Elementwise error bound of one quantize/dequantize round trip.
+
+    int8: rounding contributes ``scale / 2``; an f16-stored scale adds
+    ``|q| * scale * 2**-11 <= amax * 2**-11``.  fp8 e4m3 has 3 mantissa
+    bits: relative error ``2**-4`` of the magnitude plus one subnormal
+    step.  Slack of 1.01 absorbs f32 arithmetic rounding in the bound
+    itself.
+    """
+    scale = jnp.asarray(scale, jnp.float32)
+    amax = jnp.asarray(amax, jnp.float32)
+    if jnp.dtype(dtype).name == "int8":
+        return (0.5 * scale + amax * 2.0 ** -11) * 1.01
+    return (amax * 2.0 ** -4 + scale * 2.0 ** -8 + amax * 2.0 ** -11) * 1.01
+
+
+def kv_byte_ratio(head_dim: int, *, dtype="int8",
+                  wide_bytes: int = 2) -> float:
+    """Bytes-per-token ratio of a ``wide_bytes``-wide KV cache over the
+    quantized one (values at 1 byte + one f16 scale per D-wide vector) —
+    the factor the paged pool's concurrency grows by at a fixed byte
+    budget.  >= 1.8 needs head_dim >= 32 with f16 scales."""
+    itemsize = jnp.dtype(dtype).itemsize
+    scale_bytes = jnp.dtype(SCALE_DTYPE).itemsize
+    return (wide_bytes * head_dim) / (itemsize * head_dim + scale_bytes)

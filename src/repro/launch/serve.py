@@ -45,10 +45,14 @@ def main():
                     help="KV layout: per-slot max_len rows, or a page "
                          "pool with per-slot page tables + prefix reuse")
     ap.add_argument("--page-size", type=int, default=16,
-                    help="tokens per KV page (paged cache only)")
+                    help="tokens per KV page (paged cache only); 0 "
+                         "resolves the tuned page size from the tuning db")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="page pool size; default matches the contiguous "
                          "byte budget (slots * max_len / page_size)")
+    ap.add_argument("--kv-dtype", default=None,
+                    help="quantized KV cache storage, e.g. int8 or "
+                         "float8_e4m3fn (default: the compute dtype)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -64,13 +68,14 @@ def main():
     if args.requests > 0:
         max_len = args.prompt_len + args.tokens + 1
         if args.cache == "paged":       # pool leaves come in whole pages
-            max_len = -(-max_len // args.page_size) * args.page_size
+            round_to = args.page_size or 16
+            max_len = -(-max_len // round_to) * round_to
         eng = Engine(model, params, ServeConfig(
             max_len=max_len,
             temperature=args.temperature, slots=args.slots,
             refill_schedule=args.schedule, mode=args.mode,
-            cache=args.cache, page_size=args.page_size,
-            num_pages=args.num_pages))
+            cache=args.cache, page_size=args.page_size or None,
+            num_pages=args.num_pages, kv_dtype=args.kv_dtype))
         rng = np.random.RandomState(0)
         prompts = [rng.randint(1, cfg.vocab_size, int(l)).astype(np.int32)
                    for l in rng.randint(max(2, args.prompt_len // 4),

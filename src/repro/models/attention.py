@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import autotune, compat
+from repro.kernels import quant
 from repro.models import layers
 
 NEG_INF = -1e30
@@ -261,6 +262,19 @@ def attn_apply(
                                   cfg.rope_theta)
             k = layers.apply_rope(k, jnp.broadcast_to(kpos, (b, src.shape[1])),
                                   cfg.rope_theta)
+        # Quantized cache ("ks"/"vs" scale leaves present): tokens are
+        # quantized per (token, head) vector on write, and reads
+        # dequantize before the attention math.  Both paged and
+        # contiguous writes route through the same quantize call, so
+        # paged decode stays bit-identical to the contiguous cache just
+        # like the float path.  (The Pallas paged decode kernel applies
+        # the same scales in-kernel, post-matmul —
+        # kernels/decode_attention.paged_decode_attention_quantized.)
+        quantized = "ks" in cache
+
+        def _quant_tok(t, ref, sref):
+            return quant.quantize(t, dtype=ref.dtype, scale_dtype=sref.dtype)
+
         paged = "pt" in cache
         if paged:
             # Paged decode: k/v are a SHARED page pool [Np+1, ps, Hkv, D]
@@ -279,25 +293,73 @@ def attn_apply(
             page = jnp.minimum(length // ps, pcount - 1)
             phys = jnp.take_along_axis(pt, page[:, None], axis=1)[:, 0]
             off = length % ps
-            ck = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
-            cv = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
-            new_cache = {"k": ck, "v": cv, "pt": pt, "len": length + s}
-            k = ck[pt].reshape(b, pcount * ps, hkv, hd)
-            v = cv[pt].reshape(b, pcount * ps, hkv, hd)
+            if quantized:
+                kq_t, ks_t = _quant_tok(k[:, 0], cache["k"], cache["ks"])
+                vq_t, vs_t = _quant_tok(v[:, 0], cache["v"], cache["vs"])
+                ck = cache["k"].at[phys, off].set(kq_t)
+                cv = cache["v"].at[phys, off].set(vq_t)
+                cks = cache["ks"].at[phys, off].set(ks_t)
+                cvs = cache["vs"].at[phys, off].set(vs_t)
+                new_cache = {"k": ck, "ks": cks, "v": cv, "vs": cvs,
+                             "pt": pt, "len": length + s}
+                k = quant.dequantize(
+                    ck[pt].reshape(b, pcount * ps, hkv, hd),
+                    cks[pt].reshape(b, pcount * ps, hkv, 1))
+                v = quant.dequantize(
+                    cv[pt].reshape(b, pcount * ps, hkv, hd),
+                    cvs[pt].reshape(b, pcount * ps, hkv, 1))
+            else:
+                ck = cache["k"].at[phys, off].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[phys, off].set(
+                    v[:, 0].astype(cache["v"].dtype))
+                new_cache = {"k": ck, "v": cv, "pt": pt, "len": length + s}
+                k = ck[pt].reshape(b, pcount * ps, hkv, hd)
+                v = cv[pt].reshape(b, pcount * ps, hkv, hd)
         elif per_row:
             # each row writes its token at its own position
             upd = lambda c, u, l: jax.lax.dynamic_update_slice(c, u, (l, 0, 0))
-            ck = jax.vmap(upd)(cache["k"], k.astype(cache["k"].dtype), length)
-            cv = jax.vmap(upd)(cache["v"], v.astype(cache["v"].dtype), length)
-            new_cache = {"k": ck, "v": cv, "len": length + s}
-            k, v = ck, cv
+            if quantized:
+                kq_t, ks_t = _quant_tok(k, cache["k"], cache["ks"])
+                vq_t, vs_t = _quant_tok(v, cache["v"], cache["vs"])
+                ck = jax.vmap(upd)(cache["k"], kq_t, length)
+                cv = jax.vmap(upd)(cache["v"], vq_t, length)
+                cks = jax.vmap(upd)(cache["ks"], ks_t, length)
+                cvs = jax.vmap(upd)(cache["vs"], vs_t, length)
+                new_cache = {"k": ck, "ks": cks, "v": cv, "vs": cvs,
+                             "len": length + s}
+                k = quant.dequantize(ck, cks)
+                v = quant.dequantize(cv, cvs)
+            else:
+                ck = jax.vmap(upd)(cache["k"], k.astype(cache["k"].dtype),
+                                   length)
+                cv = jax.vmap(upd)(cache["v"], v.astype(cache["v"].dtype),
+                                   length)
+                new_cache = {"k": ck, "v": cv, "len": length + s}
+                k, v = ck, cv
         else:
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, length, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, length, 0, 0))
-            new_cache = {"k": ck, "v": cv, "len": length + s}
-            k, v = ck, cv
+            if quantized:
+                kq_t, ks_t = _quant_tok(k, cache["k"], cache["ks"])
+                vq_t, vs_t = _quant_tok(v, cache["v"], cache["vs"])
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], kq_t, (0, length, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], vq_t, (0, length, 0, 0))
+                cks = jax.lax.dynamic_update_slice(
+                    cache["ks"], ks_t, (0, length, 0, 0))
+                cvs = jax.lax.dynamic_update_slice(
+                    cache["vs"], vs_t, (0, length, 0, 0))
+                new_cache = {"k": ck, "ks": cks, "v": cv, "vs": cvs,
+                             "len": length + s}
+                k = quant.dequantize(ck, cks)
+                v = quant.dequantize(cv, cvs)
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, length, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, length, 0, 0))
+                new_cache = {"k": ck, "v": cv, "len": length + s}
+                k, v = ck, cv
         from repro.distributed.sharding import active_policy
         pol = active_policy()
         if (s == 1 and pol is not None and pol.decode_seq_shard
@@ -331,8 +393,18 @@ def attn_apply(
 
 
 def init_kv_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
-    return {
+    """KV cache tree.  A quantized ``dtype`` (int8 / fp8) adds per-token
+    scale leaves "ks"/"vs" [B, Smax, Hkv, 1] — the token axis rides the
+    same position as k/v, so the generic cache walkers (paging, splice,
+    prefix gather) handle them with no special cases."""
+    c = {
         "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
         "len": jnp.zeros((), jnp.int32),
     }
+    if quant.is_quant_dtype(dtype):
+        c["ks"] = jnp.zeros((batch, max_len, cfg.n_kv_heads, 1),
+                            quant.SCALE_DTYPE)
+        c["vs"] = jnp.zeros((batch, max_len, cfg.n_kv_heads, 1),
+                            quant.SCALE_DTYPE)
+    return c

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
+from repro.kernels import quant
 from repro.models import attention as attn_mod
 from repro.models import layers, mla, ssm, transformer as tfm
 
@@ -331,6 +332,13 @@ class Model:
                    dtype=jnp.bfloat16, enc_len: Optional[int] = None) -> Any:
         cfg = self.cfg
         fam = cfg.family
+        if quant.is_quant_dtype(dtype) and (
+                cfg.use_mla or fam in ("vlm", "encdec")):
+            raise ValueError(
+                f"quantized KV cache ({jnp.dtype(dtype).name}) requires "
+                f"every attention cache to be a standard attn_apply KV "
+                f"cache; family {fam!r}{' (MLA)' if cfg.use_mla else ''} "
+                f"keeps latent/cross caches with their own access paths")
         ac = tfm.attn_cfg(cfg)
         sc = tfm.ssm_cfg(cfg) if cfg.ssm_state else None
 
@@ -478,7 +486,8 @@ class Model:
 
         return walk(cache)
 
-    def cache_batch_axes(self, *, per_row_len: bool = True) -> Any:
+    def cache_batch_axes(self, *, per_row_len: bool = True,
+                         dtype=jnp.bfloat16) -> Any:
         """Tree of ints: the batch-axis index of every cache leaf.
 
         Leaves are layer-stacked, so the batch axis is not a fixed
@@ -487,10 +496,12 @@ class Model:
         continuous-serve cache form where ``len`` entries are [B] vectors
         (see :meth:`set_cache_lengths`); with ``per_row_len=False`` the
         scalar-``len`` leaves have no batch axis at all and map to ``-1``
-        (:meth:`splice_cache` leaves such leaves untouched)."""
+        (:meth:`splice_cache` leaves such leaves untouched).  ``dtype``
+        must match the cache being spliced — a quantized cache carries
+        extra scale leaves the default probe would not see."""
 
         def make(bsz):
-            cache = self.init_cache(bsz, 8)
+            cache = self.init_cache(bsz, 8, dtype)
             if per_row_len:
                 cache = self.set_cache_lengths(cache,
                                                jnp.zeros(bsz, jnp.int32))
@@ -555,15 +566,18 @@ class Model:
         split prefills batch-coupled."""
         return self.cfg.family == "dense" and not self.cfg.use_mla
 
-    def cache_page_spec(self, *, max_len: int = 8) -> Any:
+    def cache_page_spec(self, *, max_len: int = 8,
+                        dtype=jnp.bfloat16) -> Any:
         """Tree of ints over the contiguous cache: each leaf's *token-axis*
         index (the axis that scales with ``max_len``), or ``-1`` for leaves
         that do not grow with sequence length (recurrent state, ``len``
         entries).  Identified by probing two abstract ``max_len`` values —
-        nothing is allocated."""
+        nothing is allocated.  ``dtype`` must match the cache being paged:
+        a quantized cache's scale leaves ("ks"/"vs") carry the token axis
+        too and become scale page pools alongside the value pools."""
 
-        a = jax.eval_shape(lambda: self.init_cache(2, max_len))
-        b = jax.eval_shape(lambda: self.init_cache(2, 2 * max_len))
+        a = jax.eval_shape(lambda: self.init_cache(2, max_len, dtype))
+        b = jax.eval_shape(lambda: self.init_cache(2, 2 * max_len, dtype))
 
         def axis(x, y):
             diffs = [i for i, (p, q) in enumerate(zip(x.shape, y.shape))
@@ -610,7 +624,7 @@ class Model:
         pages_per_seq = max_len // page_size
         template = jax.eval_shape(
             lambda: self.init_cache(n_slots, max_len, dtype))
-        spec = self.cache_page_spec()
+        spec = self.cache_page_spec(dtype=dtype)
 
         def walk(tpl, sp):
             if isinstance(tpl, dict):

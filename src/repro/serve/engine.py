@@ -61,6 +61,12 @@ class ServeConfig:
     eos_id: int = -1            # -1 = never stops early
     temperature: float = 0.0    # 0 = greedy
     cache_dtype: str = "float32"
+    # KV cache storage dtype; None = cache_dtype.  "int8" (or
+    # "float8_e4m3fn" where jax has it) stores quantized values plus
+    # per-token f16 scales — roughly half the cache bytes, so a fixed
+    # page-pool budget admits ~2x the concurrent slots (see
+    # repro.kernels.quant.kv_byte_ratio and benchmarks/serve_paged_sweep).
+    kv_dtype: Optional[str] = None
     slots: int = 4              # fixed batch slots for serve()
     refill_schedule: str = "static"  # admission / refill-packing policy
     refill_threads: int = 4     # rounds mode: host threads for the packing
@@ -74,7 +80,10 @@ class ServeConfig:
     prefill_buckets: Optional[Sequence[int]] = None
     # ---- cache backend (continuous mode) ----
     cache: str = "contiguous"   # "contiguous" | "paged"
-    page_size: int = 16         # tokens per KV page (must divide max_len)
+    # tokens per KV page (must divide max_len); None = resolve the tuned
+    # page size from the autotuner db (paged_decode_attention bucket with
+    # the page_size-sweep sentinel) for this max_len / head_dim / kv dtype
+    page_size: Optional[int] = 16
     # pool pages; None = slots * max_len / page_size (same KV bytes as the
     # contiguous engine — shrink it to trade memory against deferrals)
     num_pages: Optional[int] = None
@@ -96,13 +105,16 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg
+        # storage dtype of every KV cache this engine allocates (prefill
+        # caches, contiguous rows, page pools); quantized dtypes make the
+        # model's caches carry scale leaves — see models/attention.py
+        self.kv_dtype = jnp.dtype(cfg.kv_dtype or cfg.cache_dtype)
+        kvd = self.kv_dtype
         self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, cfg.max_len,
-                                       jnp.dtype(cfg.cache_dtype)))
+            lambda p, b: model.prefill(p, b, cfg.max_len, kvd))
         self._prefill_padded = jax.jit(
             lambda p, toks, lens: model.prefill_padded(
-                p, {"tokens": toks, "lengths": lens}, cfg.max_len,
-                jnp.dtype(cfg.cache_dtype)))
+                p, {"tokens": toks, "lengths": lens}, cfg.max_len, kvd))
         self._decode = jax.jit(model.decode_step)
         # greedy decode transfers [B] token ids, never [B, vocab] logits
         self._argmax = jax.jit(
@@ -256,7 +268,7 @@ class Engine:
 
     def _ensure_splice(self):
         if self._splice is None:
-            axes = self.model.cache_batch_axes()
+            axes = self.model.cache_batch_axes(dtype=self.kv_dtype)
             self._splice = jax.jit(
                 lambda c, pc, s: self.model.splice_cache(c, pc, s,
                                                          axes=axes))

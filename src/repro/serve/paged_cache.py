@@ -296,8 +296,7 @@ class ContiguousBackend:
         cfg = self.eng.cfg
         model = self.eng.model
         self.cache = model.set_cache_lengths(
-            model.init_cache(cfg.slots, cfg.max_len,
-                             jnp.dtype(cfg.cache_dtype)),
+            model.init_cache(cfg.slots, cfg.max_len, self.eng.kv_dtype),
             np.zeros(cfg.slots, np.int32))
 
     def validate(self, requests, cap_of) -> None:
@@ -350,13 +349,25 @@ class PagedBackend:
                 f"{' (MLA)' if model.cfg.use_mla else ''} has no paged "
                 f"decode path (moe/MLA latent caches are future work) — "
                 f"use ServeConfig(cache='contiguous')")
-        if cfg.max_len % cfg.page_size:
+        dtype = engine.kv_dtype
+        ps = cfg.page_size
+        if ps is None:
+            # resolve the tuned page size from the autotuner db: the
+            # page_size=0 sentinel bucket's candidates sweep page sizes
+            # (and staging depths) for this cache shape and storage dtype
+            from repro.core import autotune, autotune_search
+            picked = autotune_search.lookup_or_search(
+                "paged_decode_attention", s=cfg.max_len, page_size=0,
+                d=model.cfg.resolved_head_dim, dtype=dtype.name)
+            ps = autotune.fit_block(cfg.max_len,
+                                    int(picked.get("page_size", 16)))
+        if cfg.max_len % ps:
             raise ValueError(
                 f"max_len {cfg.max_len} must be a multiple of page_size "
-                f"{cfg.page_size}")
-        self.ps = cfg.page_size
-        self.pages_per_seq = cfg.max_len // cfg.page_size
-        self.spec = model.cache_page_spec()
+                f"{ps}")
+        self.ps = ps
+        self.pages_per_seq = cfg.max_len // ps
+        self.spec = model.cache_page_spec(dtype=dtype)
         leaves = jax.tree.leaves(self.spec)
         self.has_pages = any(ax >= 0 for ax in leaves)
         self.num_pages = cfg.num_pages
@@ -370,13 +381,12 @@ class PagedBackend:
         self.prefix: Optional[PrefixCache] = None
         if cfg.prefix_cache and model.prefix_shareable and self.has_pages:
             self.prefix = PrefixCache(self.alloc, self.ps)
-        dtype = jnp.dtype(cfg.cache_dtype)
         self.cache = model.init_paged_cache(
             cfg.slots, cfg.max_len, self.num_pages, self.ps, dtype)
         self.slot_pages: List[List[int]] = [[] for _ in range(cfg.slots)]
         self.deferred = 0
 
-        spec, axes = self.spec, model.cache_batch_axes()
+        spec, axes = self.spec, model.cache_batch_axes(dtype=dtype)
         self._write = jax.jit(lambda c, pc, phys, j: model.write_page(
             c, pc, phys, j, spec=spec, page_size=self.ps))
         self._admit = jax.jit(

@@ -1,0 +1,456 @@
+"""Quantized execution paths gate.
+
+Four layers, mirroring the PR's surfaces:
+
+1. **Round-trip properties** — seeded fuzz + hypothesis over magnitudes,
+   vector widths and storage dtypes: a quantize/dequantize round trip
+   stays inside :func:`repro.kernels.quant.max_abs_error`, the analytic
+   per-vector bound (including the f16-stored-scale term).
+2. **Scale-aware kernel bounds** — every quantized kernel must match its
+   dequantize-then-run oracle to kernel tolerance, and the oracle must
+   sit within a bound *derived from the actual scales* of the float
+   reference (not a hand-tuned atol): attention propagates the per-key
+   bound through the softmax's l1-Lipschitz constant; gmm and ssd are
+   linear in the quantized operand, so the bound is the same linear map
+   applied to the elementwise error bound.
+3. **Placement invariance** — quantized paged decode (classic and
+   pipelined) is bit-identical under any permutation of physical page
+   placement, and pipelined is bit-identical to classic.
+4. **Arbitration + serving** — the tuning db keys on dtype (two dtypes,
+   one shape => two entries; a key without dtype is rejected), quantized
+   candidate sets only propose configs the quantized ops can run,
+   ``ServeConfig(page_size=None)`` resolves the tuned page size from a
+   warm db with zero timed measurements, and the int8-KV paged engine is
+   bit-identical to the int8-KV contiguous engine.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import autotune_search
+from repro.core.autotune_search import SearchOptions, TuningDB
+from repro.kernels import quant
+from repro.models import Model
+
+try:
+    from hypothesis import given
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+FAST = SearchOptions(top_k=3, warmup=0, reps=1)
+QDTYPES = quant.quant_dtypes()
+
+
+@pytest.fixture
+def db_path(tmp_path, monkeypatch):
+    """Isolated persistent db + search mode; process view reset around."""
+    path = tmp_path / "tuning_db.json"
+    monkeypatch.setenv("REPRO_TUNING", "search")
+    monkeypatch.setenv("REPRO_TUNING_DB", str(path))
+    autotune_search.reset_db()
+    yield path
+    autotune_search.reset_db()
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("qwen2.5-3b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+               for l in (8, 5, 11, 3)]
+    return cfg, model, params, prompts
+
+
+# ---------------------------------------------------------------------------
+# 1. quantize/dequantize round trip
+# ---------------------------------------------------------------------------
+
+def _roundtrip_within_bound(x, dtype, scale_dtype):
+    q, s = quant.quantize(x, dtype=dtype, scale_dtype=scale_dtype)
+    assert q.dtype == jnp.dtype(dtype)
+    if scale_dtype is not None:
+        assert s.dtype == jnp.dtype(scale_dtype)
+    err = jnp.abs(quant.dequantize(q, s) - x.astype(jnp.float32))
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    bound = quant.max_abs_error(s, amax, dtype)
+    assert bool(jnp.all(err <= bound)), (
+        f"round-trip error {float(jnp.max(err - bound)):.3e} past the "
+        f"analytic bound ({dtype}, scale {scale_dtype})")
+
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+@pytest.mark.parametrize("mag", [1e-6, 1.0, 3e3])
+def test_roundtrip_seeded_fuzz(dtype, mag):
+    for seed, shape in [(0, (4, 32)), (1, (2, 7, 16)), (2, (3, 1))]:
+        rng = np.random.RandomState(seed)
+        x = (rng.standard_normal(shape) * mag).astype(np.float32)
+        x[..., 0, :] = 0.0  # all-zero vectors must round-trip exactly
+        for scale_dtype in (None, quant.SCALE_DTYPE):
+            _roundtrip_within_bound(jnp.asarray(x), dtype, scale_dtype)
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2 ** 31 - 1),
+           log_mag=st.integers(-10, 10),
+           d=st.sampled_from([1, 2, 16, 33, 128]),
+           dtype=st.sampled_from(QDTYPES))
+    def test_roundtrip_property(seed, log_mag, d, dtype):
+        rng = np.random.RandomState(seed)
+        x = jnp.asarray((rng.standard_normal((3, d))
+                         * 2.0 ** log_mag).astype(np.float32))
+        _roundtrip_within_bound(x, dtype, quant.SCALE_DTYPE)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_roundtrip_property():
+        pass
+
+
+def test_quantize_rejects_unknown_dtype():
+    with pytest.raises(ValueError, match="unsupported quantized dtype"):
+        quant.quantize(jnp.ones((2, 4)), dtype=jnp.float16)
+
+
+def test_kv_byte_ratio_crosses_acceptance_at_head_dim_32():
+    assert quant.kv_byte_ratio(32) >= 1.8
+    assert quant.kv_byte_ratio(64) >= 1.8
+    assert quant.kv_byte_ratio(16) < 1.8  # why serve tests pin head_dim
+
+
+# ---------------------------------------------------------------------------
+# 2. scale-aware kernel error bounds
+# ---------------------------------------------------------------------------
+
+def _attn_out_bound(q, k_q, k_scale, v_q, v_scale, dtype):
+    """Bound on |quant_ref - float_ref| for softmax attention.
+
+    Score error: |q_i . dk_j| / sqrt(d) <= ||q_i||_1 * kb / sqrt(d).
+    Softmax is 2-Lipschitz l_inf -> l_1, so the probability mass moves by
+    at most 2*serr; the output error is the moved mass times max|v| plus
+    the value dequantization error carried through the convex combination.
+    """
+    d = q.shape[-1]
+    qf = jnp.abs(q.astype(jnp.float32))
+    q_l1 = float(jnp.max(jnp.sum(qf, axis=-1)))
+    k_amax = jnp.max(jnp.abs(quant.dequantize(k_q, k_scale)),
+                     axis=-1, keepdims=True)
+    v_deq = quant.dequantize(v_q, v_scale)
+    v_amax = jnp.max(jnp.abs(v_deq), axis=-1, keepdims=True)
+    kb = float(jnp.max(quant.max_abs_error(k_scale, k_amax, dtype)))
+    vb = float(jnp.max(quant.max_abs_error(v_scale, v_amax, dtype)))
+    serr = q_l1 * kb / np.sqrt(d)
+    return (vb + 2.0 * serr * float(jnp.max(jnp.abs(v_deq)))) * 1.2 + 1e-6
+
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_flash_quant_kernel_oracle_and_bound(dtype):
+    from repro.kernels.flash_attention.ops import flash_attention_quantized
+    from repro.kernels.flash_attention.ref import (flash_attention_quant_ref,
+                                                   flash_attention_ref)
+
+    ks = jax.random.split(jax.random.PRNGKey(30), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16))
+    k = jax.random.normal(ks[1], (1, 64, 1, 16))
+    v = jax.random.normal(ks[2], (1, 64, 1, 16))
+    k_q, k_s = quant.quantize(k, dtype=dtype, scale_dtype=quant.SCALE_DTYPE)
+    v_q, v_s = quant.quantize(v, dtype=dtype, scale_dtype=quant.SCALE_DTYPE)
+    o = flash_attention_quantized(q, k_q, k_s, v_q, v_s, interpret=True)
+    o_ref = flash_attention_quant_ref(q, k_q, k_s, v_q, v_s)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5,
+                               rtol=2e-5)
+    bound = _attn_out_bound(q, k_q, k_s, v_q, v_s, dtype)
+    fl = flash_attention_ref(q, k, v)
+    assert float(jnp.max(jnp.abs(o_ref - fl))) <= bound
+
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_decode_quant_kernel_oracle_and_bound(dtype):
+    from repro.kernels.decode_attention.ops import decode_attention_quantized
+    from repro.kernels.decode_attention.ref import (
+        decode_attention_quant_ref, decode_attention_ref)
+
+    ks = jax.random.split(jax.random.PRNGKey(31), 3)
+    q = jax.random.normal(ks[0], (2, 2, 16))
+    k = jax.random.normal(ks[1], (2, 64, 1, 16))
+    v = jax.random.normal(ks[2], (2, 64, 1, 16))
+    kv_len = jnp.array([64, 37], jnp.int32)
+    k_q, k_s = quant.quantize(k, dtype=dtype, scale_dtype=quant.SCALE_DTYPE)
+    v_q, v_s = quant.quantize(v, dtype=dtype, scale_dtype=quant.SCALE_DTYPE)
+    o = decode_attention_quantized(q, k_q, k_s, v_q, v_s, kv_len,
+                                   num_splits=4, interpret=True)
+    o_ref = decode_attention_quant_ref(q, k_q, k_s, v_q, v_s, kv_len)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5,
+                               rtol=2e-5)
+    bound = _attn_out_bound(q, k_q, k_s, v_q, v_s, dtype)
+    fl = decode_attention_ref(q, k, v, kv_len)
+    assert float(jnp.max(jnp.abs(o_ref - fl))) <= bound
+
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_gmm_quant_kernel_oracle_and_bound(dtype):
+    from repro.kernels.moe_gmm.ops import (grouped_matmul_quantized,
+                                           quantize_expert_weights)
+    from repro.kernels.moe_gmm.ref import gmm_quant_ref, gmm_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(32), 2)
+    x = jax.random.normal(ks[0], (2, 32, 32))
+    w = jax.random.normal(ks[1], (2, 32, 24))
+    w_q, w_s = quantize_expert_weights(w, dtype=dtype)
+    o = grouped_matmul_quantized(x, w_q, w_s, interpret=True)
+    o_ref = gmm_quant_ref(x, w_q, w_s)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=1e-4,
+                               rtol=1e-4)
+    # the matmul is linear in w: |x . dw| <= ||x_row||_1 * elementwise
+    # bound of that output column
+    w_amax = jnp.max(jnp.abs(quant.dequantize(w_q, w_s)), axis=1,
+                     keepdims=True)
+    wb = quant.max_abs_error(w_s, w_amax, dtype)        # [E, 1, F]
+    x_l1 = jnp.sum(jnp.abs(x), axis=-1, keepdims=True)  # [E, C, 1]
+    bound = x_l1 * wb * 1.2 + 1e-5
+    err = jnp.abs(o_ref - gmm_ref(x, w))
+    assert bool(jnp.all(err <= bound))
+
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_ssd_quant_kernel_oracle_and_bound(dtype):
+    from repro.kernels.mamba_ssd.ops import ssd_quantized
+    from repro.kernels.mamba_ssd.ref import ssd_quant_ref, ssd_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(33), 5)
+    x = jax.random.normal(ks[0], (1, 64, 2, 16))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 64, 2)))
+    a = -jnp.exp(jax.random.normal(ks[2], (2,)))
+    b_in = jax.random.normal(ks[3], (1, 64, 1, 16))
+    c_in = jax.random.normal(ks[4], (1, 64, 1, 16))
+    x_q, x_s = quant.quantize(x, dtype=dtype, scale_dtype=quant.SCALE_DTYPE)
+    y, st_out = ssd_quantized(x_q, x_s, dt, a, b_in, c_in, chunk=16,
+                              interpret=True)
+    y_ref, _ = ssd_quant_ref(x_q, x_s, dt, a, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4,
+                               rtol=1e-3)
+    # the SSD is linear in x with positive decay/dt coefficients, so the
+    # same recurrence run on (|b|, |c|, elementwise x-bound) majorizes the
+    # propagated quantization error
+    x_amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    xb = jnp.broadcast_to(quant.max_abs_error(x_s, x_amax, dtype), x.shape)
+    y_bound, _ = ssd_ref(xb.astype(jnp.float32), dt, a,
+                         jnp.abs(b_in), jnp.abs(c_in))
+    err = jnp.abs(y_ref.astype(jnp.float32) - ssd_ref(x, dt, a, b_in,
+                                                      c_in)[0])
+    assert bool(jnp.all(err <= y_bound * 1.05 + 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# 3. paged placement invariance
+# ---------------------------------------------------------------------------
+
+def _paged_quant_inputs(dtype, *, pages=6, ps=8, d=16):
+    ks = jax.random.split(jax.random.PRNGKey(34), 3)
+    q = jax.random.normal(ks[0], (2, 2, d))
+    kf = jax.random.normal(ks[1], (pages + 1, ps, 1, d))
+    vf = jax.random.normal(ks[2], (pages + 1, ps, 1, d))
+    k_q, k_s = quant.quantize(kf, dtype=dtype, scale_dtype=quant.SCALE_DTYPE)
+    v_q, v_s = quant.quantize(vf, dtype=dtype, scale_dtype=quant.SCALE_DTYPE)
+    pt = jnp.array([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    kv_len = jnp.array([3 * ps, 2 * ps - 3], jnp.int32)
+    return q, k_q, k_s, v_q, v_s, pt, kv_len
+
+
+@pytest.mark.parametrize("dtype", QDTYPES)
+def test_paged_quant_bit_identical_across_page_placements(dtype):
+    """Physical page placement is an allocator artifact: permuting the
+    pool rows (and the page tables with them) must not change a single
+    output bit, for the classic and the pipelined quantized kernels —
+    and the two kernels must agree bit-for-bit with each other."""
+    from repro.kernels.decode_attention.kernel import (
+        paged_decode_attention_fwd_quantized,
+        paged_decode_attention_fwd_quantized_pipelined)
+    from repro.kernels.decode_attention.ref import (
+        paged_decode_attention_quant_ref)
+
+    q, k_q, k_s, v_q, v_s, pt, kv_len = _paged_quant_inputs(dtype)
+    base = paged_decode_attention_fwd_quantized(
+        q, k_q, k_s, v_q, v_s, pt, kv_len, interpret=True)
+    base_pipe = paged_decode_attention_fwd_quantized_pipelined(
+        q, k_q, k_s, v_q, v_s, pt, kv_len, num_buffers=2, interpret=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(base_pipe))
+    ref = paged_decode_attention_quant_ref(q, k_q, k_s, v_q, v_s, pt,
+                                           kv_len)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+    rng = np.random.RandomState(35)
+    for _ in range(3):
+        perm = np.concatenate([[0], rng.permutation(k_q.shape[0] - 1) + 1])
+        inv = np.argsort(perm)
+        scatter = lambda pool: jnp.asarray(np.asarray(pool)[inv])
+        pt2 = jnp.asarray(perm[np.asarray(pt)], jnp.int32)
+        args = (q, scatter(k_q), scatter(k_s), scatter(v_q), scatter(v_s),
+                pt2, kv_len)
+        np.testing.assert_array_equal(
+            np.asarray(base),
+            np.asarray(paged_decode_attention_fwd_quantized(
+                *args, interpret=True)))
+        np.testing.assert_array_equal(
+            np.asarray(base),
+            np.asarray(paged_decode_attention_fwd_quantized_pipelined(
+                *args, num_buffers=2, interpret=True)))
+
+
+# ---------------------------------------------------------------------------
+# 4. dtype-keyed arbitration + serving
+# ---------------------------------------------------------------------------
+
+def test_bucket_key_without_dtype_is_rejected():
+    spec = autotune_search.SPECS["flash_attention"]
+    with pytest.raises(ValueError, match="dtype"):
+        spec.bucket_key({"sq": 32, "skv": 32, "d": 16, "causal": 1})
+
+
+def test_dtype_collision_creates_two_db_entries(db_path):
+    """The aliasing regression: one shape searched under two storage
+    dtypes must produce two tuning-db entries (the second resolution is a
+    fresh MISS, not a silent hit on the first dtype's winner)."""
+    shape = dict(sq=32, skv=32, d=16, causal=True)
+    autotune_search.lookup_or_search("flash_attention", options=FAST,
+                                     dtype="float32", **shape)
+    assert len(autotune_search.get_db()) == 1
+    before = autotune_search.measurement_count()
+    cfg_q = autotune_search.lookup_or_search("flash_attention", options=FAST,
+                                             dtype="int8", **shape)
+    assert autotune_search.measurement_count() > before
+    db = autotune_search.get_db()
+    assert len(db) == 2
+    assert sum("dtype=int8" in k for k in db.entries) == 1
+    assert sum("dtype=float32" in k for k in db.entries) == 1
+    # quantized flash is classic-only: the recorded winner must be
+    # runnable by the quantized op
+    assert cfg_q.get("num_buffers", 1) == 1
+
+
+def test_quant_candidates_only_propose_runnable_configs():
+    for kernel, shape in [
+        ("flash_attention", dict(sq=64, skv=64, d=16, causal=True)),
+        ("decode_attention", dict(s=128, d=16)),
+    ]:
+        spec = autotune_search.SPECS[kernel]
+        cands = spec.candidates(spec.bucket(dtype="int8", **shape))
+        assert cands
+        assert all(c.get("num_buffers", 1) == 1 for c in cands), (
+            f"{kernel}: quantized candidate set proposes a staging depth "
+            f"the quantized kernel cannot run")
+    # the paged quant kernel HAS a pipelined variant: depths must survive
+    spec = autotune_search.SPECS["paged_decode_attention"]
+    cands = spec.candidates(spec.bucket(s=512, page_size=16, d=32,
+                                        dtype="int8"))
+    assert any(c.get("num_buffers", 1) > 1 for c in cands)
+
+
+def test_page_size_sentinel_candidates_sweep_page_sizes():
+    spec = autotune_search.SPECS["paged_decode_attention"]
+    bucket = spec.bucket(s=128, page_size=0, d=16, dtype="int8")
+    cands = spec.candidates(bucket)
+    assert all("page_size" in c for c in cands)
+    assert len({c["page_size"] for c in cands}) > 1
+    # the analytic fallback for the open bucket also pins a page size
+    assert "page_size" in spec.analytic({"s": 128, "page_size": 0,
+                                         "d": 16, "dtype": "int8"})
+
+
+def test_serve_page_size_none_resolves_warm_db_with_zero_measurements(
+        db_path, monkeypatch, dense_setup):
+    """Satellite (a): a warm sentinel-bucket entry drives the serving
+    pool's page size — resolved at engine-build time with zero timed
+    measurements, then served normally."""
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg, model, params, prompts = dense_setup
+    marker = {"page_size": 8, "num_buffers": 1}
+    db = TuningDB.open(db_path)
+    spec = autotune_search.SPECS["paged_decode_attention"]
+    bucket = spec.bucket(s=48, page_size=0,
+                         d=model.cfg.resolved_head_dim, dtype="float32")
+    db.record("paged_decode_attention", autotune_search.backend_name(),
+              spec.bucket_key(bucket), marker)
+    autotune_search.reset_db()
+    monkeypatch.setenv("REPRO_TUNING", "on")  # lookup-only: misses stay free
+
+    eng = Engine(model, params,
+                 ServeConfig(max_len=48, slots=2, cache="paged",
+                             page_size=None, prefix_cache=False,
+                             refill_schedule="faa"))
+    before = autotune_search.measurement_count()
+    out = eng.serve(prompts[:2], 3)
+    assert autotune_search.measurement_count() == before
+    assert eng._backend.ps == 8
+    assert len(out) == 2
+
+    # contiguous engine on the same prompts: the tuned page size is a
+    # latency/packing knob, never a numerics knob
+    ref_eng = Engine(model, params,
+                     ServeConfig(max_len=48, slots=2,
+                                 refill_schedule="faa"))
+    for a, b in zip(ref_eng.serve(prompts[:2], 3), out):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_serve_paged_int8_bit_identical_to_contiguous(dense_setup):
+    """The serving tentpole gate: same numerics, different layout — the
+    int8-KV paged engine must reproduce the int8-KV contiguous engine's
+    greedy tokens bit-for-bit."""
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg, model, params, prompts = dense_setup
+    cont = Engine(model, params,
+                  ServeConfig(max_len=48, slots=2, kv_dtype="int8",
+                              refill_schedule="faa"))
+    ref = cont.serve(prompts, 4)
+    assert cont.kv_dtype == jnp.dtype(jnp.int8)
+    paged = Engine(model, params,
+                   ServeConfig(max_len=48, slots=4, cache="paged",
+                               page_size=8, kv_dtype="int8",
+                               prefix_cache=False, refill_schedule="faa"))
+    out = paged.serve(prompts, 4)
+    for i, (a, b) in enumerate(zip(ref, out)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    # the pool really stores quantized values + scale sidecars
+    spec = model.cache_page_spec(dtype=jnp.dtype(jnp.int8))
+    flat = jax.tree_util.tree_leaves_with_path(spec)
+    names = {jax.tree_util.keystr(p) for p, _ in flat}
+    assert any("ks" in n for n in names) and any("vs" in n for n in names)
+
+
+def test_quantized_kv_cache_shrinks_bytes_by_ratio(dense_setup):
+    """eval_shape byte accounting at head_dim 32: the quantized contiguous
+    cache's bytes-per-token ratio equals kv_byte_ratio(32) >= 1.8."""
+    cfg, _, _, _ = dense_setup
+    model = Model(dataclasses.replace(cfg, head_dim=32))
+
+    def kv_bytes(dtype):
+        tree = jax.eval_shape(lambda: model.init_cache(2, 32, dtype))
+        return sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(tree)
+                   if l.dtype != jnp.int32)  # exclude the length bookkeeping
+
+    ratio = kv_bytes(jnp.bfloat16) / kv_bytes(jnp.int8)
+    assert abs(ratio - quant.kv_byte_ratio(32)) < 0.01
+    assert ratio >= 1.8
+
+
+def test_quantized_kv_cache_rejects_non_kv_families():
+    """MLA / vlm / encdec caches are not plain (k, v) token streams — a
+    quantized kv_dtype must fail loudly, not silently store garbage."""
+    for arch in ("deepseek-v2-lite-16b", "llama-3.2-vision-11b",
+                 "seamless-m4t-large-v2"):
+        model = Model(get_config(arch).reduced())
+        with pytest.raises(ValueError, match="quantized KV cache"):
+            model.init_cache(1, 8, jnp.int8)

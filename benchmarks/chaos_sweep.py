@@ -1,0 +1,249 @@
+"""Chaos sweep: seeded fault plans vs the degradation policies.
+
+The robustness analogue of the admission sweeps: instead of asking what a
+scheduling policy costs in FAA latency, each row asks what a *fault plan*
+costs in completed requests — and what each degradation policy buys back.
+One row per (policy configuration, fault plan): survival rate, shed and
+failed counts, retries, deferrals, p95 latency, and the injected-stall
+ledger (the exposed-wait analogue of the cost model's contention term —
+see ``docs/robustness.md`` and ``docs/paper_map.md``).
+
+    PYTHONPATH=src python -m benchmarks.chaos_sweep            # real model
+    PYTHONPATH=src python -m benchmarks.chaos_sweep --dry-run  # no forward
+
+``--dry-run`` (the CI chaos-smoke job) skips the model but keeps the real
+chaos machinery: the ParallelFor claim boundary takes injected faults,
+stalls, and worker crashes on the persistent pool, and the real
+:class:`PageAllocator` takes forced allocation failures — with the run's
+invariants hard-asserted, not eyeballed:
+
+* every injection decision reproduces bit-for-bit from the plan seed;
+* the stall ledger is exact (virtual chaos clock: count x duration);
+* the worker pool survives crashes and re-converges;
+* the allocator ends exactly-once (freed == allocated, no leak).
+
+The model table additionally hard-asserts the serve-level differential:
+every request terminates exactly once in {ok, failed, shed} and every
+OK request's tokens are bit-identical to the no-fault run.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+TABLE = "chaos_sweep"
+SEED = 0
+PAGE_SIZE = 8
+MAX_LEN = 48
+MAX_NEW = 4
+
+
+# ------------------------------------------------------------------ dry run
+
+def _pf_chaos_rows() -> list[dict]:
+    """ParallelFor claim-boundary chaos on the persistent runtime pool."""
+    from repro.core import faults, runtime
+    from repro.core.faults import (FaultPlan, TaskFault, WorkerCrash,
+                                   WorkerStall)
+    from repro.core.parallel_for import parallel_for_stats
+    from repro.core.schedulers import PoolErrorGroup
+
+    rows = []
+    n = 64
+    for name, spec in [
+        ("stall", WorkerStall(layer="chaos", p=0.25, duration_s=0.002)),
+        ("fault", TaskFault(layer="chaos", p=0.1)),
+        ("crash", WorkerCrash(layer="chaos", indices=(17,))),
+    ]:
+        outcomes = []
+        for rep in range(2):       # two runs: determinism is the assert
+            plan = FaultPlan(seed=SEED + 7, specs=[spec])
+            hit = set()
+            err = ""
+            with faults.fault_scope(plan):
+                try:
+                    stats = parallel_for_stats(
+                        hit.add, n, n_threads=4, layer="chaos",
+                        schedule="static", block_size=1)
+                    stall = stats.injected_stall_s
+                except (RuntimeError, faults.WorkerAbort) as e:
+                    stall = plan.clock.elapsed_s
+                    err = type(e).__name__
+            outcomes.append((frozenset(hit), round(stall, 6), err))
+        assert outcomes[0] == outcomes[1], (
+            f"{name}: chaos run did not reproduce from its seed: "
+            f"{outcomes}")
+        survivors, stall, err = outcomes[0]
+        if name == "stall":
+            assert err == "" and len(survivors) == n
+            assert stall > 0.0
+        if name == "fault":
+            assert err in ("InjectedFault", "PoolErrorGroup")
+            assert len(survivors) < n
+        if name == "crash":
+            assert err == "WorkerAbort"
+            # the pool survived the crash: a clean follow-up run drains
+            check = set()
+            parallel_for_stats(check.add, n, n_threads=4, layer="chaos")
+            assert check == set(range(n))
+        rows.append({
+            "table": TABLE, "backend": "dry", "scenario": f"pf-{name}",
+            "n": n, "survivors": len(survivors),
+            "injected_stall_s": stall, "error": err or "-",
+        })
+    assert issubclass(PoolErrorGroup, RuntimeError)
+    return rows
+
+
+def _alloc_chaos_rows() -> list[dict]:
+    """Forced page-allocation failures against the real PageAllocator."""
+    from repro.core import faults
+    from repro.core.faults import FaultPlan, PageFailure
+    from repro.serve.paged_cache import PageAllocator
+
+    rows = []
+    for p in (0.0, 0.3, 0.6):
+        plan = FaultPlan(seed=SEED + 11, specs=[PageFailure(p=p)])
+        alloc = PageAllocator(32, slots=4, schedule="faa")
+        held, denied, granted = [], 0, 0
+        with faults.fault_scope(plan):
+            for step in range(64):
+                got = alloc.try_alloc(2)
+                if got is None:
+                    denied += 1
+                else:
+                    granted += 1
+                    held.append(got)
+                if len(held) > 12:     # steady churn: free the oldest
+                    alloc.free(held.pop(0))
+        for pages in held:
+            alloc.free(pages)
+        # exactly-once accounting under injected denial: everything
+        # granted comes back, the free list is whole again
+        assert alloc.free_count == 32      # the whole pool came back
+        assert alloc.pages_allocated == 2 * granted
+        if p == 0.0:
+            assert denied == 0
+        else:
+            assert denied > 0
+        rows.append({
+            "table": TABLE, "backend": "dry", "scenario": f"alloc-p{p}",
+            "n": 64, "granted": granted, "denied": denied,
+            "pages_allocated": alloc.pages_allocated,
+        })
+    return rows
+
+
+def dry_run_table() -> list[dict]:
+    return _pf_chaos_rows() + _alloc_chaos_rows()
+
+
+# -------------------------------------------------------------- model table
+
+def _policies() -> list[tuple[str, dict]]:
+    return [
+        ("baseline", {}),
+        ("isolate", {}),                       # isolate_failures default on
+        ("retry", {"max_retries": 2, "backoff": 1.0}),
+        ("shed", {"on_pressure": "shed"}),
+        ("defer", {"on_pressure": "defer"}),
+        ("deadline", {"deadline_ticks": 8, "max_retries": 1}),
+    ]
+
+
+def _plans():
+    from repro.core.faults import (DecodeStall, FaultPlan, PageFailure,
+                                   PoisonRequest)
+    return [
+        ("none", lambda: None),
+        ("poison", lambda: FaultPlan(seed=SEED + 1, specs=[
+            PoisonRequest(rids=(2,), times=1)])),
+        ("pressure", lambda: FaultPlan(seed=SEED + 3, specs=[
+            PageFailure(p=1.0, times=4)])),
+        ("straggler", lambda: FaultPlan(seed=SEED + 1, specs=[
+            DecodeStall(p=0.5, duration_s=0.002)])),
+    ]
+
+
+def model_table(arch: str = "qwen2.5-3b") -> list[dict]:
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import faults
+    from repro.models import Model
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(SEED)
+    prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+               for l in [8, 8, 5, 8, 5, 11, 3]]
+
+    def serve(plan, **kw):
+        eng = Engine(model, params, ServeConfig(
+            cache="paged", page_size=PAGE_SIZE, max_len=MAX_LEN, slots=2,
+            prefix_cache=False, **kw))
+        if plan is None:
+            return eng.serve(prompts, MAX_NEW), eng.last_report
+        with faults.fault_scope(plan):
+            return eng.serve(prompts, MAX_NEW), eng.last_report
+
+    ref, _ = serve(None)
+    rows = []
+    for pol_name, pol_kw in _policies():
+        for plan_name, mk in _plans():
+            if plan_name == "pressure" and pol_kw.get("on_pressure",
+                                                      "raise") == "raise":
+                continue        # hard deadlock under raise: no row to emit
+            out, rep = serve(mk(), **pol_kw)
+            # the chaos differential, hard-asserted on every row
+            statuses = [t.status for t in rep.requests]
+            assert all(s in ("ok", "failed", "shed") for s in statuses)
+            assert (rep.ok_requests + rep.failed_requests
+                    + rep.shed_requests) == rep.n_requests
+            assert rep.pages_freed == rep.pages_allocated
+            for t in rep.requests:
+                if t.status == "ok":
+                    np.testing.assert_array_equal(
+                        ref[t.rid], out[t.rid],
+                        err_msg=f"{pol_name}/{plan_name} rid {t.rid}")
+            rows.append({
+                "table": TABLE, "backend": "model", "arch": arch,
+                "policy": pol_name, "plan": plan_name,
+                "survival_rate": round(rep.survival_rate, 3),
+                "ok": rep.ok_requests, "failed": rep.failed_requests,
+                "shed": rep.shed_requests, "retries": rep.retries,
+                "deferred": rep.deferred_admissions,
+                "ticks": rep.total_ticks,
+                "p95_latency_s": round(rep.latency_percentile(95), 4),
+                "injected_stall_s": round(rep.injected_stall_s, 4),
+            })
+    return rows
+
+
+def sweep_table() -> list[dict]:
+    return model_table()
+
+
+ALL = [sweep_table]
+QUICK = [dry_run_table]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="chaos on the pool + allocator only, no model")
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    args = ap.parse_args()
+    rows = dry_run_table() if args.dry_run else model_table(args.arch)
+    keys = sorted({k for r in rows for k in r})
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+
+
+if __name__ == "__main__":
+    main()

@@ -38,13 +38,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="sim | cost | taskflow | sched | serve | paged "
-                         "| device | roofline | calib | kautotune | quant")
+                         "| device | roofline | calib | kautotune | quant "
+                         "| chaos")
     ap.add_argument("--quick", action="store_true",
                     help="run each suite's QUICK subset (CI smoke)")
     args = ap.parse_args()
 
-    from benchmarks import (calibration_sweep, cost_model_bench,
-                            device_knobs, dryrun_summary,
+    from benchmarks import (calibration_sweep, chaos_sweep,
+                            cost_model_bench, device_knobs, dryrun_summary,
                             kernel_autotune_sweep, quant_sweep,
                             scheduler_sweep, serve_admission_sweep,
                             serve_paged_sweep, sim_tables,
@@ -62,6 +63,7 @@ def main() -> None:
         "calib": calibration_sweep,
         "kautotune": kernel_autotune_sweep,
         "quant": quant_sweep,
+        "chaos": chaos_sweep,
     }
     suites = {name: (getattr(m, "QUICK", m.ALL) if args.quick else m.ALL)
               for name, m in mods.items()}

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model as _cm
+from repro.core import faults as _faults
 from repro.core import runtime as _rt
 from repro.core import schedulers as _sched
 from repro.core.schedulers import (AtomicCounter, ScheduleStats, Scheduler,
@@ -74,11 +75,21 @@ def parallel_for_stats(
         raise ValueError("n must be >= 0")
     sched = _sched.get_scheduler(schedule)
     pool = pool or _rt.get_pool().scoped(n_threads)
+    # fault injection resolves at the call boundary: one global read when
+    # no plan is installed (the zero-overhead contract), a task wrapper at
+    # the claim boundary when this run's layer is targeted
+    inj = _faults.active()
+    run_faults = inj.for_layer(layer) if inj is not None else None
+    if run_faults is not None:
+        task = run_faults.wrap(task)
     if n == 0:
         stats = _sched.empty_stats(sched.name, pool.n_threads)
     else:
         stats = sched.run(task, n, pool, block_size=block_size,
                           cost_inputs=cost_inputs)
+    if run_faults is not None:
+        stats.injected_stall_s += run_faults.stall_s
+        stats.injected_faults += run_faults.fired
     _rt.record_stats(layer, stats)
     return stats
 

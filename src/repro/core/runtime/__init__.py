@@ -36,7 +36,8 @@ from repro.core.runtime.calibrate import (HostMeasurement, TuningContext,
                                           default_context, load_calibration,
                                           measure_host, ranking_consistency,
                                           run_calibration, save_calibration)
-from repro.core.runtime.pool import PoolTelemetry, ScopedPool, WorkerPool
+from repro.core.runtime.pool import (PoolTelemetry, ScopedPool, WorkerAbort,
+                                     WorkerPool)
 from repro.core.schedulers.base import ScheduleStats
 
 __all__ = [
@@ -44,6 +45,7 @@ __all__ = [
     "PoolTelemetry",
     "ScopedPool",
     "TuningContext",
+    "WorkerAbort",
     "WorkerPool",
     "calibrate",
     "calibration_path",

@@ -20,10 +20,11 @@ itself runs a ParallelFor) deadlock-free by construction.
 
 :class:`ScopedPool` satisfies the schedulers' ``ThreadPool`` contract —
 ``run(thread_task)`` executes ``thread_task(tid)`` for tids ``0..n-1``
-with the caller participating as tid 0, and re-raises the lowest-tid task
-exception after every thread drains — and additionally records which OS
-thread ran which tid (``current_tid``), which is the only hook the
-admission adapter needs.
+with the caller participating as tid 0, and after every thread drains
+re-raises the captured task errors (one error as itself, several as a
+``PoolErrorGroup`` naming every failed tid) — and additionally records
+which OS thread ran which tid (``current_tid``), which is the only hook
+the admission adapter needs.
 
 Because the pool outlives any single call, its :class:`PoolTelemetry` can
 aggregate the :class:`ScheduleStats` of every run *across layers* (data
@@ -37,11 +38,24 @@ import queue
 import threading
 from typing import Callable, Dict, Optional
 
-from repro.core.schedulers.base import ScheduleStats, ThreadPool
+from repro.core.schedulers.base import (ScheduleStats, ThreadPool,
+                                        raise_task_errors)
 
-__all__ = ["PoolTelemetry", "ScopedPool", "WorkerPool"]
+__all__ = ["PoolTelemetry", "ScopedPool", "WorkerAbort", "WorkerPool"]
 
 _STOP = object()
+
+
+class WorkerAbort(BaseException):
+    """Raise inside a pool job to kill the worker thread running it.
+
+    The fault injector's worker-crash vector (and the test hook for any
+    externally-died thread): the pool treats it as the thread's death —
+    the worker leaves the roster instead of re-marking itself idle, so the
+    accounting stays consistent and the next submit spawns a replacement
+    rather than handing work to a ghost.  Derives from BaseException so
+    blanket ``except Exception`` task wrappers cannot accidentally revive
+    a crashed worker."""
 
 
 class PoolTelemetry:
@@ -145,14 +159,33 @@ class WorkerPool:
             if item is _STOP:
                 return
             fn, on_done = item
+            crashed = False
             try:
                 fn()
+            except WorkerAbort:
+                # forced/injected worker death: leave the roster instead of
+                # re-marking idle — a dead thread counted idle would absorb
+                # a later submit's idle-slot claim and wedge the pool (the
+                # job sits in the queue with one fewer reader than the
+                # accounting promises)
+                crashed = True
             except BaseException:  # noqa: BLE001 — see submit()
                 pass
             with self._lock:
-                self._idle += 1
+                if crashed:
+                    try:
+                        self._workers.remove(threading.current_thread())
+                    except ValueError:
+                        pass
+                else:
+                    self._idle += 1
             if on_done is not None:
-                on_done()
+                try:
+                    on_done()
+                except BaseException:  # noqa: BLE001 — a raising on_done
+                    pass  # must not kill the worker or skew idle counts
+            if crashed:
+                return
 
     def scoped(self, n_threads: int) -> "ScopedPool":
         """A ``ThreadPool``-contract view running on the shared workers."""
@@ -174,8 +207,8 @@ class WorkerPool:
 class ScopedPool(ThreadPool):
     """A view of a shared :class:`WorkerPool` with the schedulers'
     ``ThreadPool`` shape: ``n_threads`` logical threads, the caller
-    participating as tid 0, per-tid error capture with the lowest-tid
-    exception re-raised after the pool drains.
+    participating as tid 0, per-tid error capture re-raised after the
+    pool drains (one failure as itself, several as a ``PoolErrorGroup``).
 
     Also serves as the admission adapter's tid-recording pool: during
     ``run`` each logical thread registers its OS thread ident, so a task
@@ -197,12 +230,21 @@ class ScopedPool(ThreadPool):
             self._tid_of[threading.get_ident()] = tid
             try:
                 thread_task(tid)
+            except WorkerAbort as e:
+                # a forced worker death is still this tid's failure, but it
+                # must ALSO reach the worker loop so the thread actually
+                # dies (accounting restored there).  Never re-raise on the
+                # caller's own thread — tid 0 has no worker to kill.
+                errors[tid] = e
+                if tid != 0:
+                    raise
             except BaseException as e:  # noqa: BLE001 — re-raised below
                 errors[tid] = e
 
         def done() -> None:
-            # runs in the worker AFTER it re-marked itself idle, so a
-            # caller unblocked here can submit again without spawning
+            # runs in the worker AFTER it re-marked itself idle (or left
+            # the roster, if it crashed), so a caller unblocked here can
+            # submit again without spawning a redundant thread
             nonlocal pending
             with cond:
                 pending -= 1
@@ -214,9 +256,7 @@ class ScopedPool(ThreadPool):
         with cond:
             while pending:
                 cond.wait()
-        for e in errors:
-            if e is not None:
-                raise e
+        raise_task_errors(errors)
 
     def current_tid(self) -> int:
         return self._tid_of[threading.get_ident()]

@@ -20,10 +20,11 @@ policy                  shared-counter FAA behavior
 
 from repro.core.schedulers.admission import (AdmissionPlan, TidRecordingPool,
                                              plan_admission)
-from repro.core.schedulers.base import (AtomicCounter, Recorder,
-                                        ScheduleStats, Scheduler, ThreadPool,
-                                        available_schedulers, empty_stats,
-                                        get_scheduler, register_scheduler)
+from repro.core.schedulers.base import (AtomicCounter, PoolErrorGroup,
+                                        Recorder, ScheduleStats, Scheduler,
+                                        ThreadPool, available_schedulers,
+                                        empty_stats, get_scheduler,
+                                        raise_task_errors, register_scheduler)
 from repro.core.schedulers.cost_model import CostModelScheduler
 from repro.core.schedulers.faa import FaaScheduler
 from repro.core.schedulers.guided import GuidedScheduler
@@ -38,6 +39,7 @@ __all__ = [
     "FaaScheduler",
     "GuidedScheduler",
     "HierarchicalScheduler",
+    "PoolErrorGroup",
     "Recorder",
     "ScheduleStats",
     "Scheduler",
@@ -49,5 +51,6 @@ __all__ = [
     "empty_stats",
     "get_scheduler",
     "plan_admission",
+    "raise_task_errors",
     "register_scheduler",
 ]

@@ -56,6 +56,36 @@ class AtomicCounter:
             return self._value
 
 
+class PoolErrorGroup(RuntimeError):
+    """More than one pool task failed in a single run.
+
+    The message names every failed tid with its exception, so a
+    multi-worker fault is diagnosable from the traceback alone instead of
+    showing only the lowest tid's error (the others used to be silently
+    dropped).  ``errors`` holds the per-tid exceptions in tid order."""
+
+    def __init__(self, errors: list):
+        self.errors = list(errors)
+        detail = "; ".join(
+            f"tid {tid}: {type(e).__name__}: {e}" for tid, e in self.errors)
+        super().__init__(
+            f"{len(self.errors)} pool task(s) failed: {detail}")
+
+
+def raise_task_errors(errors: list) -> None:
+    """Surface per-tid captured exceptions to the pool's caller.
+
+    Exactly one error re-raises as itself (type-compatible with every
+    pre-group caller: ``except ValueError`` keeps working); two or more
+    aggregate into a :class:`PoolErrorGroup` naming every failed tid."""
+    failed = [(tid, e) for tid, e in enumerate(errors) if e is not None]
+    if not failed:
+        return
+    if len(failed) == 1:
+        raise failed[0][1]
+    raise PoolErrorGroup(failed)
+
+
 class ThreadPool:
     """A minimal pool with the enqueue/wait shape of the paper's snippet."""
 
@@ -72,8 +102,8 @@ class ThreadPool:
         A ``task`` that raises must surface to the caller, not die silently
         inside a worker thread: every thread's first exception is captured,
         the surviving threads drain normally (no policy blocks waiting on a
-        peer, so join() cannot deadlock), and the lowest-tid exception is
-        re-raised here.
+        peer, so join() cannot deadlock), and the captured errors re-raise
+        here — one error as itself, several as a :class:`PoolErrorGroup`.
         """
         errors: list = [None] * self.n_threads
 
@@ -92,9 +122,7 @@ class ThreadPool:
         guarded(0)
         for w in workers:
             w.join()
-        for e in errors:
-            if e is not None:
-                raise e
+        raise_task_errors(errors)
 
 
 @dataclasses.dataclass
@@ -118,6 +146,9 @@ class ScheduleStats:
     items_per_thread: np.ndarray    # iterations executed, by thread
     claim_sizes: Dict[int, int]     # histogram: claimed-block size -> count
     steals: int = 0                 # successful steals (stealing policy only)
+    # ---- fault-injection telemetry (zeros outside a fault_scope) ----
+    injected_stall_s: float = 0.0   # exposed wait charged by injected stalls
+    injected_faults: int = 0        # injected task faults / crashes raised
 
     @property
     def faa_total(self) -> int:

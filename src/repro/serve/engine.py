@@ -38,12 +38,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as _faults
 from repro.core import parallel_for as pf
 from repro.core import runtime as rt
 from repro.models.model import Model
@@ -98,6 +99,30 @@ class ServeConfig:
     # slots drain, pages free, and the large request stops losing every
     # race to smaller ones behind it.  None disables the barrier.
     max_deferred_ticks: Optional[int] = 32
+    # ---- graceful degradation (see docs/robustness.md) ----
+    # decode-tick deadline per admission: a request that has decoded this
+    # many ticks without finishing is cancelled mid-decode (slot freed,
+    # partial tokens discarded) and retried or failed.  None = no deadline.
+    deadline_ticks: Optional[int] = None
+    # cancelled / poisoned admissions re-enter the queue this many times
+    # before the request goes terminal FAILED
+    max_retries: int = 0
+    # retry k re-enters admission after backoff * 2**(k-1) ticks; the
+    # queue ages the delay without holding a slot
+    backoff: float = 1.0
+    # what an admission deadlock (nothing live, nothing admittable) does:
+    #   "raise" — RuntimeError, destroying every in-flight result (the
+    #             pre-robustness behavior; kept the default)
+    #   "shed"  — drop the youngest deferred pending request with a SHED
+    #             terminal status and keep admitting the rest
+    #   "defer" — never raise: requests that can never admit go terminal
+    #             FAILED and the batch completes around them
+    on_pressure: str = "raise"
+    # per-request failure isolation: an exception confined to one
+    # request's admission or decode boundary marks that request FAILED
+    # (its pages/slots reclaimed) instead of destroying the batch.
+    # False restores propagate-everything.
+    isolate_failures: bool = True
 
 
 class Engine:
@@ -223,6 +248,16 @@ class Engine:
         if max_new_tokens < 0:
             raise ValueError(f"max_new_tokens must be >= 0, "
                              f"got {max_new_tokens}")
+        if self.cfg.on_pressure not in ("raise", "shed", "defer"):
+            raise ValueError(
+                f"ServeConfig.on_pressure must be 'raise', 'shed' or "
+                f"'defer', got {self.cfg.on_pressure!r}")
+        if self.cfg.max_retries < 0:
+            raise ValueError(f"ServeConfig.max_retries must be >= 0, "
+                             f"got {self.cfg.max_retries}")
+        if self.cfg.deadline_ticks is not None and self.cfg.deadline_ticks < 1:
+            raise ValueError(f"ServeConfig.deadline_ticks must be >= 1, "
+                             f"got {self.cfg.deadline_ticks}")
         requests = as_requests(prompts)
         for r in requests:
             budget = (max_new_tokens if r.max_new_tokens is None
@@ -276,6 +311,9 @@ class Engine:
     def _serve_continuous(self, requests: List[Request],
                           max_new_tokens: int, seed: int) -> list:
         cfg = self.cfg
+        # fault injection resolves once per serve() call: a single module-
+        # global read when no plan is installed (zero-overhead contract)
+        inj = _faults.active()
         block = cfg.admission_block
         if block is None:
             block = rt.tuning().admission_block(len(requests), cfg.slots)
@@ -294,6 +332,10 @@ class Engine:
         # rid of a request past the cfg.max_deferred_ticks aging bound:
         # while set, admission is barred for everyone else (see below)
         starving: Optional[int] = None
+        # ---- degradation state (inert on the no-fault default path) ----
+        terminal: set = set()            # rids holding a terminal status
+        not_before: Dict[int, int] = {}  # retry backoff: rid -> earliest tick
+        engine_stall_s = 0.0             # injected decode-loop stall ledger
 
         def cap_of(req: Request) -> int:
             return (max_new_tokens if req.max_new_tokens is None
@@ -309,7 +351,48 @@ class Engine:
         backend = self._backend
         backend.begin_call()
         backend.validate(requests, cap_of)
+        for req in requests:
+            # configuration errors (over-bucket / over-max_len prompts)
+            # fail fast here, like backend.validate — isolation is for
+            # per-request runtime faults, not caller mistakes
+            self._bucket_width(req.prompt_len)
         t0 = time.monotonic()
+
+        def set_terminal(rid: int, status: str, reason: str = "") -> None:
+            """Assign the request's terminal status.  Exactly once by
+            construction — a second assignment is an engine accounting bug
+            and raises (the chaos differential's no-lost-request half is
+            checked at the end of the run)."""
+            nonlocal starving
+            if rid in terminal:
+                raise RuntimeError(
+                    f"request {rid} assigned a second terminal status "
+                    f"({telem[rid].status!r} then {status!r})")
+            terminal.add(rid)
+            tm = telem[rid]
+            tm.status = status
+            tm.fail_reason = reason
+            if tm.finish_tick < 0:
+                tm.finish_tick = tick
+            if not np.isfinite(tm.finish_s):
+                tm.finish_s = time.monotonic() - t0
+            if starving == rid:
+                starving = None
+
+        def retry_or_fail(req: Request, reason: str) -> bool:
+            """A cancelled / poisoned request re-enters the admission race
+            with exponential backoff (holding no slot while it waits) until
+            its retry budget is spent, then goes terminal FAILED.  Returns
+            True when the request was requeued for another attempt."""
+            tm = telem[req.rid]
+            if tm.retries < cfg.max_retries:
+                tm.retries += 1
+                delay = max(1, int(round(cfg.backoff * 2 ** (tm.retries - 1))))
+                not_before[req.rid] = tick + delay
+                queue.requeue(req.rid)
+                return True
+            set_terminal(req.rid, "failed", reason)
+            return False
 
         def finish(slot: int) -> None:
             req = slot_req[slot]
@@ -319,11 +402,23 @@ class Engine:
             tm.decode_tokens = max(0, len(outputs[req.rid]) - 1)
             slot_req[slot] = None
             backend.finish(slot)
+            set_terminal(req.rid, "ok")
+
+        def cancel(slot: int, reason: str) -> None:
+            """Cancel mid-decode: reclaim the slot and its cache pages,
+            discard the partial tokens, and retry or fail the request."""
+            req = slot_req[slot]
+            slot_req[slot] = None
+            backend.finish(slot)
+            outputs[req.rid] = None
+            retry_or_fail(req, reason)
 
         while True:
             # refill every free slot in flight — no round barrier, so a
             # long sequence elsewhere never blocks this admission
             progress = False
+            deferred_pass = 0   # admissions bounced on page pressure
+            delayed_pass = 0    # requests held out by retry backoff
             for s in range(cfg.slots):
                 if slot_req[s] is not None:
                     continue
@@ -336,7 +431,15 @@ class Engine:
                     telem[req.rid].admit_tick = tick
                     telem[req.rid].finish_tick = tick
                     telem[req.rid].finish_s = time.monotonic() - t0
+                    set_terminal(req.rid, "ok")
                     progress = True
+                    continue
+                if not_before.get(req.rid, 0) > tick:
+                    # retry backoff: not yet eligible — rotate to the back
+                    # of the shallowest backlog (no deferral penalty) so
+                    # it cannot head-of-line block the slot it landed on
+                    queue.requeue(req.rid)
+                    delayed_pass += 1
                     continue
                 if starving is not None and req.rid != starving:
                     # aging barrier: a request past the deferral bound is
@@ -347,7 +450,24 @@ class Engine:
                     # request lands; running slots drain and free pages.
                     queue.push_back(s, req)
                     continue
-                res = backend.admit(s, req, cap_of(req))
+                try:
+                    if inj is not None:
+                        inj.check_admission(req.rid)
+                    res = backend.admit(s, req, cap_of(req))
+                except Exception as e:
+                    if not cfg.isolate_failures:
+                        raise
+                    # per-request failure isolation: this admission died
+                    # (a poisoned request, or an organic prefill error
+                    # scoped to it) — the batch survives.  The backend
+                    # reclaims any pages it claimed before re-raising, so
+                    # nothing leaks; the request retries or goes FAILED.
+                    if retry_or_fail(
+                            req, f"admission: {type(e).__name__}: {e}"):
+                        delayed_pass += 1
+                    else:
+                        progress = True
+                    continue
                 if res is None:
                     # partial admission: the request's page demand exceeds
                     # the free pool right now — back on this slot's backlog
@@ -356,6 +476,7 @@ class Engine:
                     queue.push_back(s, req)
                     tm = telem[req.rid]
                     tm.deferred_ticks += 1
+                    deferred_pass += 1
                     if (starving is None
                             and cfg.max_deferred_ticks is not None
                             and tm.deferred_ticks > cfg.max_deferred_ticks):
@@ -385,34 +506,91 @@ class Engine:
             if not live and queue.pending == 0:
                 break
             if not live:
-                if not progress:
-                    # nothing running, nothing admitted, requests pending:
-                    # no decode tick can free pages, so retrying is a spin.
-                    # validate() makes this unreachable; keep it loud.
-                    raise RuntimeError(
-                        f"refill deadlock: {queue.pending} request(s) "
-                        f"pending, no slot live, and no admission can "
-                        f"proceed")
-                continue    # every admitted request finished on its first
-                            # token; loop back for the rest of the queue
+                if progress:
+                    continue    # every admitted request finished on its
+                                # first token; loop back for the rest
+                if delayed_pass:
+                    # everything actionable is waiting out a retry backoff
+                    # and nothing is running: only the clock can move, so
+                    # charge an idle tick and retry admission
+                    tick += 1
+                    continue
+                # true admission deadlock: nothing running, nothing
+                # admitted, and no decode tick can free pages — retrying
+                # is a spin.  cfg.on_pressure picks the blast radius.
+                if cfg.on_pressure == "shed":
+                    # load shedding: drop the youngest request already
+                    # bounced on pressure (max rid = latest submission —
+                    # the oldest deferred request keeps its aging credit),
+                    # then let the survivors admit into the freed demand
+                    pend = queue.pending_rids()
+                    deferred = [r for r in pend
+                                if telem[r].deferred_ticks > 0]
+                    victim = max(deferred) if deferred else max(pend)
+                    queue.drop(victim)
+                    set_terminal(victim, "shed",
+                                 "load shed: admission deadlock under "
+                                 "page pressure")
+                    continue
+                if cfg.on_pressure == "defer":
+                    # graceful completion: requests that can never admit
+                    # go terminal FAILED and the batch ends around them
+                    for r in list(queue.pending_rids()):
+                        queue.drop(r)
+                        set_terminal(r, "failed",
+                                     "page pressure: admission can never "
+                                     "proceed")
+                    continue
+                # "raise" — the pre-robustness behavior, still the default
+                raise RuntimeError(
+                    f"refill deadlock: {queue.pending} request(s) "
+                    f"pending, no slot live, and no admission can "
+                    f"proceed")
 
+            if inj is not None:
+                # injected decode-loop stall (a straggler engine tick):
+                # charged to the chaos clock and surfaced in the report's
+                # injected_stall_s — the exposed-wait term
+                engine_stall_s += inj.engine_stall(tick)
             logits, backend.cache = self._decode(
                 self.params, jnp.asarray(tok)[:, None], backend.cache)
             tick += 1
             greedy_toks = (np.asarray(self._argmax(logits))
                            if cfg.temperature <= 0 else None)
             for s in live:
+                rid = slot_req[s].rid
+                if inj is not None:
+                    try:
+                        inj.check_decode(rid, len(outputs[rid]))
+                    except Exception as e:
+                        if not cfg.isolate_failures:
+                            raise
+                        cancel(s, f"decode: {type(e).__name__}: {e}")
+                        continue
                 if greedy_toks is not None:
                     nxt_tok = int(greedy_toks[s])
                 else:
                     slot_key[s], kt = jax.random.split(slot_key[s])
                     nxt_tok = self._sample_row(logits[s], kt)
                 tok[s] = nxt_tok
-                rid = slot_req[s].rid
                 outputs[rid].append(nxt_tok)
                 if nxt_tok == cfg.eos_id or len(outputs[rid]) >= slot_cap[s]:
                     finish(s)
+            if cfg.deadline_ticks is not None:
+                for s in range(cfg.slots):
+                    req = slot_req[s]
+                    if req is None:
+                        continue
+                    if (tick - telem[req.rid].admit_tick
+                            >= cfg.deadline_ticks):
+                        cancel(s, f"deadline: exceeded {cfg.deadline_ticks}"
+                                  f" decode tick(s) since admission")
 
+        missing = [r.rid for r in requests if r.rid not in terminal]
+        if missing:
+            raise RuntimeError(
+                f"lost request(s) {missing}: the run ended with no "
+                f"terminal status assigned — engine accounting bug")
         results = []
         for req in requests:
             cap = cap_of(req)
@@ -435,6 +613,15 @@ class Engine:
         self.last_report.prefill_tokens = int(
             sum(t.prefill_tokens for t in telem.values()))
         backend.fill_report(self.last_report)
+        rep = self.last_report
+        rep.failed_requests = sum(
+            1 for t in telem.values() if t.status == "failed")
+        rep.shed_requests = sum(
+            1 for t in telem.values() if t.status == "shed")
+        rep.retries = sum(t.retries for t in telem.values())
+        rep.injected_stall_s = (
+            engine_stall_s + queue.plan.stats.injected_stall_s
+            + sum(st.injected_stall_s for st in rep.page_alloc_stats))
         return results
 
     # --------------------------------------------- legacy round barrier

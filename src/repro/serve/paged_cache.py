@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as _faults
 from repro.core import parallel_for as pf
 from repro.core.schedulers import ScheduleStats
 
@@ -97,6 +98,13 @@ class PageAllocator:
             raise ValueError(f"cannot claim {n} pages")
         if n == 0:
             return []
+        # injected page pressure: a PageFailure spec makes this claim
+        # report exhaustion even when pages are free — the deferral /
+        # aging / shedding machinery upstream cannot tell the difference,
+        # which is the point (one global read when no plan is installed)
+        inj = _faults.active()
+        if inj is not None and inj.page_alloc_should_fail(n):
+            return None
         if n > len(self._free):
             return None
         got = np.zeros(n, np.int64)
@@ -473,24 +481,36 @@ class PagedBackend:
         mtok = len(matched) * self.ps
         prompt_pages = -(-req.prompt_len // self.ps)
 
-        if matched:
-            # zero prefill recompute for the cached prefix: materialize a
-            # batch-of-1 contiguous view of the shared pages and run the
-            # continuation prefill over the suffix only
-            view = self._gather(self.cache, pt_dev,
-                                jnp.asarray(mtok, jnp.int32))
-            suffix = jnp.asarray(req.prompt[mtok:], jnp.int32)[None, :]
-            logits, pcache = self._continue(eng.params, suffix, view)
-        else:
-            logits, pcache = _prefill_request(eng, req)
-        for j in range(len(matched), prompt_pages):
-            self.cache = self._write(self.cache, pcache,
-                                     jnp.asarray(pages[j], jnp.int32),
-                                     jnp.asarray(j, jnp.int32))
-        self.cache = self._admit(self.cache, pcache,
-                                 jnp.asarray(slot, jnp.int32),
-                                 jnp.asarray(req.prompt_len, jnp.int32),
-                                 pt_dev)
+        try:
+            if matched:
+                # zero prefill recompute for the cached prefix: materialize
+                # a batch-of-1 contiguous view of the shared pages and run
+                # the continuation prefill over the suffix only
+                view = self._gather(self.cache, pt_dev,
+                                    jnp.asarray(mtok, jnp.int32))
+                suffix = jnp.asarray(req.prompt[mtok:], jnp.int32)[None, :]
+                logits, pcache = self._continue(eng.params, suffix, view)
+            else:
+                logits, pcache = _prefill_request(eng, req)
+            for j in range(len(matched), prompt_pages):
+                self.cache = self._write(self.cache, pcache,
+                                         jnp.asarray(pages[j], jnp.int32),
+                                         jnp.asarray(j, jnp.int32))
+            self.cache = self._admit(self.cache, pcache,
+                                     jnp.asarray(slot, jnp.int32),
+                                     jnp.asarray(req.prompt_len, jnp.int32),
+                                     pt_dev)
+        except BaseException:
+            # a prefill that dies mid-admission (poisoned request, OOM)
+            # must hand every page reference this admission took straight
+            # back — matched pages drop to their prior refcount, fresh
+            # pages rejoin the free list — or the failure-isolation path
+            # would leak the pool dry one poisoned request at a time.  The
+            # prefix trie never saw these pages (insert runs below), and
+            # partially written page contents are dead until a future
+            # admission rewrites them.
+            self.alloc.free(pages)
+            raise
         if self.prefix is not None:
             if matched:
                 self.prefix.hits += 1

@@ -131,3 +131,26 @@ class RequestQueue:
         accounting exact (``pending`` includes it again) and lets the
         refill loop retry once decode ticks free pages."""
         self._backlogs[slot].appendleft(request.rid)
+
+    def requeue(self, rid: int) -> None:
+        """Re-queue a cancelled request (deadline / poison retry) on the
+        shallowest backlog — it rejoins the admission race at the back of
+        that slot's claim order, behind work it already lost to."""
+        tgt = min(range(self.slots), key=lambda s: len(self._backlogs[s]))
+        self._backlogs[tgt].append(rid)
+
+    def drop(self, rid: int) -> bool:
+        """Remove a pending request from whichever backlog holds it (the
+        load-shedding path); returns False when ``rid`` is not pending."""
+        for d in self._backlogs:
+            try:
+                d.remove(rid)
+                return True
+            except ValueError:
+                continue
+        return False
+
+    def pending_rids(self) -> List[int]:
+        """Every pending rid, slot-major in claim order (for shed-victim
+        selection and the defer policy's terminal sweep)."""
+        return [rid for d in self._backlogs for rid in d]

@@ -34,6 +34,14 @@ class RequestTelemetry:
     prefill_tokens: int = 0       # tokens actually run through prefill
     prefix_hit_tokens: int = 0    # prompt tokens served from shared pages
     deferred_ticks: int = 0       # refill passes bounced on page pressure
+    # ---- degradation telemetry (defaults = the no-fault fast path) ----
+    # terminal status: "ok" (completed), "failed" (poisoned / deadline /
+    # pressure-failed), "shed" (load-shed before admission).  The engine
+    # assigns exactly one terminal status per request — the chaos
+    # differential's no-lost-request invariant.
+    status: str = "ok"
+    fail_reason: str = ""         # why a failed/shed request ended
+    retries: int = 0              # re-admissions after cancel/poison
 
     @property
     def queue_wait_ticks(self) -> int:
@@ -79,6 +87,15 @@ class ServeReport:
     # under the admission policy — the paper's FAA counter, per claim)
     page_alloc_stats: List[ScheduleStats] = dataclasses.field(
         default_factory=list)
+    # ----- degradation telemetry (zeros outside a fault_scope) -----
+    failed_requests: int = 0        # terminal FAILED (poison/deadline/pressure)
+    shed_requests: int = 0          # terminal SHED (load shedding)
+    retries: int = 0                # total re-admissions across requests
+    # exposed wait charged by injected stalls: engine decode-loop stalls
+    # plus every stall inside this run's admission / page-claim
+    # ParallelFors — the measured analogue of the cost model's
+    # contention/FAA-wait term (see docs/robustness.md)
+    injected_stall_s: float = 0.0
 
     @property
     def page_alloc_faa_shared(self) -> int:
@@ -87,6 +104,17 @@ class ServeReport:
     @property
     def page_alloc_faa_total(self) -> int:
         return sum(s.faa_total for s in self.page_alloc_stats)
+
+    @property
+    def ok_requests(self) -> int:
+        return self.n_requests - self.failed_requests - self.shed_requests
+
+    @property
+    def survival_rate(self) -> float:
+        """Fraction of submitted requests that completed OK."""
+        if self.n_requests == 0:
+            return 1.0
+        return self.ok_requests / self.n_requests
 
     @property
     def tokens_per_s(self) -> float:
@@ -133,4 +161,9 @@ class ServeReport:
             "deferred_admissions": self.deferred_admissions,
             "page_faa_shared": self.page_alloc_faa_shared,
             "page_faa_total": self.page_alloc_faa_total,
+            "ok": self.ok_requests,
+            "failed": self.failed_requests,
+            "shed": self.shed_requests,
+            "retries": self.retries,
+            "injected_stall_s": round(self.injected_stall_s, 4),
         }

@@ -39,7 +39,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="sim | cost | taskflow | sched | serve | paged "
                          "| device | roofline | calib | kautotune | quant "
-                         "| chaos")
+                         "| chaos | spec")
     ap.add_argument("--quick", action="store_true",
                     help="run each suite's QUICK subset (CI smoke)")
     args = ap.parse_args()
@@ -49,7 +49,7 @@ def main() -> None:
                             kernel_autotune_sweep, quant_sweep,
                             scheduler_sweep, serve_admission_sweep,
                             serve_paged_sweep, sim_tables,
-                            taskflow_compare)
+                            spec_sweep, taskflow_compare)
 
     mods = {
         "sim": sim_tables,
@@ -64,6 +64,7 @@ def main() -> None:
         "kautotune": kernel_autotune_sweep,
         "quant": quant_sweep,
         "chaos": chaos_sweep,
+        "spec": spec_sweep,
     }
     suites = {name: (getattr(m, "QUICK", m.ALL) if args.quick else m.ALL)
               for name, m in mods.items()}

@@ -1,0 +1,209 @@
+"""Speculative-decoding sweep: acceptance rate × draft span k.
+
+Speculative serving is the paper's grain trade at decode granularity —
+one verification amortizes the per-token claim/admission bookkeeping
+(the FAA term) over a whole accepted span, and the draft span k is the
+block size B.  One row per (acceptance, k) cell with the amortization
+headline: FAA-per-accepted-token vs the 1-per-token non-speculative
+baseline, plus the cost model's expected span / per-token cost / best-k
+columns next to the simulated ledger they predict.
+
+    PYTHONPATH=src python -m benchmarks.spec_sweep            # real model
+    PYTHONPATH=src python -m benchmarks.spec_sweep --dry-run  # ledger only
+
+``--dry-run`` skips the model entirely: a seeded acceptance process
+drives the same drafted/accepted/wasted ledger the engine keeps, so the
+bookkeeping identity (drafted = accepted + wasted) and the amortization
+bound (FAA-per-accepted-token <= baseline) are hard-asserted on machines
+where a model forward is too slow for CI.  The real-model table serves a
+mixed workload twice per backend — speculative vs not — and hard-asserts
+bit-identical outputs plus a strict FAA-per-token win for the
+perfect-acceptance drafter.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import cost_model as cm
+
+TABLE = "spec_sweep"
+SLOTS = 2
+SEED = 0
+ACCEPTANCES = (0.0, 0.25, 0.5, 0.75, 0.9, 1.0)
+SPANS = (0, 1, 2, 3, 4)
+# modeled cost shape for the analytic columns: drafter at a quarter of
+# the verify cost, bookkeeping at 2% (one host sync per tick)
+DRAFT_COST, VERIFY_COST, SYNC_COST = 0.25, 1.0, 0.02
+
+
+# ---------------------------------------------------------------- dry run
+
+def _sim_ledger(acceptance: float, k: int, *, budgets=(4, 8, 24, 8, 2),
+                rng=None) -> dict:
+    """Seeded acceptance process driving the engine's exact ledger: per
+    tick a slot drafts k tokens, the first failure cuts the accepted
+    prefix, and min(m + 1, remaining budget) tokens are emitted."""
+    rng = rng or np.random.RandomState(SEED)
+    drafted = accepted = emitted = slot_ticks = 0
+    for budget in budgets:
+        done = 1            # admission emits the first token off prefill
+        while done < budget:
+            m = 0
+            while m < k and rng.rand() < acceptance:
+                m += 1
+            emit = min(m + 1, budget - done)
+            drafted += k
+            accepted += emit - 1
+            emitted += emit
+            done += emit
+            slot_ticks += 1
+    emitted += len(budgets)     # the admission-time first tokens
+    wasted = drafted - accepted
+    return {
+        "drafted_tokens": drafted, "accepted_tokens": accepted,
+        "wasted_tokens": wasted, "total_tokens": emitted,
+        "decode_slot_ticks": slot_ticks,
+        "acceptance_rate": round(accepted / drafted, 4) if drafted
+                           else float("nan"),
+        # every (slot, tick) is one unit of per-token decode bookkeeping;
+        # the non-speculative baseline pays exactly 1 per decoded token
+        "faa_per_token": round(slot_ticks / emitted, 4),
+    }
+
+
+def dry_run_table() -> list[dict]:
+    rows = []
+    for a in ACCEPTANCES:
+        for k in SPANS:
+            led = _sim_ledger(a, k)
+            rows.append({
+                "table": TABLE, "backend": "sim", "acceptance": a, "k": k,
+                "expected_span": round(cm.expected_accept_span(k, a), 4),
+                "token_cost": round(cm.speculative_token_cost(
+                    k, a, draft_cost=DRAFT_COST, verify_cost=VERIFY_COST,
+                    sync_cost=SYNC_COST), 4),
+                "best_k": cm.best_draft_span(
+                    a, draft_cost=DRAFT_COST, verify_cost=VERIFY_COST,
+                    sync_cost=SYNC_COST, max_k=max(SPANS)),
+                **led,
+            })
+    _assert_dry_invariants(rows)
+    return rows
+
+
+def _assert_dry_invariants(rows: list) -> None:
+    """The acceptance columns, enforced at generation time."""
+    baseline = {r["k"]: r for r in rows if r["acceptance"] == 0.0}
+    for r in rows:
+        # bookkeeping identity: every drafted token is accepted or wasted
+        assert r["drafted_tokens"] == (r["accepted_tokens"]
+                                       + r["wasted_tokens"]), r
+        # amortization bound: a verify tick always emits >= 1 token, so
+        # per-token bookkeeping never exceeds the 1/token baseline
+        assert r["faa_per_token"] <= 1.0 + 1e-9, r
+        # k = 0 degenerates to the non-speculative cost exactly
+        if r["k"] == 0:
+            assert abs(r["token_cost"]
+                       - (VERIFY_COST + SYNC_COST)) < 1e-12, r
+            assert r["faa_per_token"] >= baseline[0]["faa_per_token"] - 1e-9
+    # modeled cost is non-increasing in acceptance at fixed k >= 1, and
+    # the chosen grain (best_k) never shrinks as acceptance grows — the
+    # paper's more-work-per-claim monotonicity
+    for k in SPANS:
+        col = [r for r in rows if r["k"] == k]
+        col.sort(key=lambda r: r["acceptance"])
+        for lo, hi in zip(col, col[1:]):
+            assert hi["token_cost"] <= lo["token_cost"] + 1e-12, (k, hi)
+            assert hi["best_k"] >= lo["best_k"], (k, hi)
+    # perfect acceptance at the largest span is the cheapest cell
+    costs = {(r["acceptance"], r["k"]): r["token_cost"] for r in rows}
+    assert min(costs, key=costs.get) == (1.0, max(SPANS))
+
+
+# ------------------------------------------------------------- real model
+
+def model_table(arch: str = "qwen2.5-3b", draft_arch: str = "granite-3-2b",
+                max_new: int = 8, k: int = 3) -> list[dict]:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve.engine import Engine, ServeConfig, SpecConfig
+
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dcfg = get_config(draft_arch).reduced()
+    draft = Model(dcfg)
+    dparams = draft.init(jax.random.PRNGKey(1))
+
+    rng = np.random.RandomState(SEED)
+    prompts = [rng.randint(1, cfg.vocab_size,
+                           int(rng.choice([4, 6, 8, 12]))).astype(np.int32)
+               for _ in range(8)]
+    # drafters: the target itself (acceptance 1.0 — the bit-identity
+    # chain end to end, and the guaranteed amortization win) and a cold
+    # independent drafter (realistic low acceptance; the win must not be
+    # assumed, only measured)
+    drafters = {"self": (model, params), "cold": (draft, dparams)}
+    rows = []
+    for cache in ("contiguous", "paged"):
+        base = Engine(model, params, ServeConfig(
+            max_len=32, slots=SLOTS, cache=cache, page_size=8))
+        ref = base.serve(prompts, max_new, seed=SEED)
+        base_row = base.last_report.as_row()
+        rows.append({"table": TABLE, "backend": "model", "arch": arch,
+                     "drafter": "none", "acceptance": float("nan"),
+                     "k": 0, **base_row})
+        for name, (dm, dp) in drafters.items():
+            eng = Engine(model, params, ServeConfig(
+                max_len=32, slots=SLOTS, cache=cache, page_size=8,
+                spec=SpecConfig(draft=dm, draft_params=dp, k=k)))
+            out = eng.serve(prompts, max_new, seed=SEED)
+            rep = eng.last_report
+            assert all(np.array_equal(a, b) for a, b in zip(ref, out)), (
+                f"speculative serve diverged from greedy baseline "
+                f"({cache}, drafter={name})")
+            assert rep.drafted_tokens == (rep.accepted_tokens
+                                          + rep.wasted_tokens)
+            if name == "self":
+                # the amortization headline, measured: perfect acceptance
+                # must beat the per-token baseline strictly
+                assert rep.faa_per_token < base_row["faa_per_token"], (
+                    f"speculation did not amortize: {rep.faa_per_token} vs "
+                    f"{base_row['faa_per_token']} ({cache})")
+            rows.append({"table": TABLE, "backend": "model", "arch": arch,
+                         "drafter": name,
+                         "acceptance": rep.acceptance_rate, "k": k,
+                         **rep.as_row()})
+    return rows
+
+
+def sweep_table() -> list[dict]:
+    return model_table()
+
+
+ALL = [sweep_table]
+QUICK = [dry_run_table]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="seeded acceptance-ledger simulation, no model")
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--draft-arch", default="granite-3-2b")
+    args = ap.parse_args()
+    rows = (dry_run_table() if args.dry_run
+            else model_table(args.arch, args.draft_arch))
+    keys = sorted({k for r in rows for k in r})
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+
+
+if __name__ == "__main__":
+    main()

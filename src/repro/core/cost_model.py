@@ -355,6 +355,57 @@ def analytic_best_block(
     return int(np.clip(b, 1, max(1, n // max(1, threads))))
 
 
+# --------------------------------------------------------------- speculation
+# Speculative decoding is the serving-side instance of the paper's grain
+# trade: one verification amortizes the per-token claim/admission
+# bookkeeping (the FAA term) over a whole accepted span, and the draft
+# span k is the block size B.  With per-draft-token acceptance
+# probability a and longest-matching-prefix greedy acceptance, the span
+# emitted per verify is 1 + (number of leading matches), so
+# E[tokens/verify] = sum_{j=0..k} a^j.
+
+
+def expected_accept_span(k: int, acceptance: float) -> float:
+    """E[tokens emitted per verify] at draft span ``k``: geometric
+    longest-prefix acceptance, sum_{j=0..k} a^j = (1-a^(k+1))/(1-a)."""
+    if k < 0:
+        raise ValueError(f"draft span must be >= 0, got {k}")
+    a = min(max(float(acceptance), 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+def speculative_token_cost(
+    k: int, acceptance: float, *, draft_cost: float, verify_cost: float,
+    sync_cost: float = 0.0,
+) -> float:
+    """Expected cost per *emitted* token at draft span ``k``.
+
+    Each tick spends ``k * draft_cost`` (sequential drafter steps) plus
+    one ``verify_cost`` (the batched multi-token target forward — the
+    per-tick unit of work) plus ``sync_cost`` (the per-tick host
+    bookkeeping: acceptance scan, length rollback — the FAA analogue),
+    and emits ``expected_accept_span(k, a)`` tokens.  ``k = 0`` is the
+    non-speculative baseline: ``verify_cost + sync_cost`` per token.
+    """
+    e = expected_accept_span(k, acceptance)
+    return (k * draft_cost + verify_cost + sync_cost) / e
+
+
+def best_draft_span(
+    acceptance: float, *, draft_cost: float, verify_cost: float,
+    sync_cost: float = 0.0, max_k: int = 8,
+) -> int:
+    """argmin_k of :func:`speculative_token_cost` over 0..max_k — the
+    grain-size choice, mirroring :func:`analytic_best_block`."""
+    costs = [speculative_token_cost(k, acceptance, draft_cost=draft_cost,
+                                    verify_cost=verify_cost,
+                                    sync_cost=sync_cost)
+             for k in range(max_k + 1)]
+    return int(np.argmin(costs))
+
+
 _DEFAULT_PARAMS: Optional[dict] = None
 
 

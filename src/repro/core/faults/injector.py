@@ -13,8 +13,9 @@ The hooks are the injection surface the rest of the stack calls:
   a :class:`LayerFaults` whose ``wrap(task)`` raises / stalls / crashes
   per the plan and accumulates the stall ledger that
   ``parallel_for_stats`` copies into ``ScheduleStats.injected_stall_s``.
-* ``check_admission(rid)`` / ``check_decode(rid, step)`` — the serve
-  engine's per-request boundaries; raise :class:`RequestPoisoned`.
+* ``check_admission(rid)`` / ``check_decode(rid, step)`` /
+  ``check_draft(rid, step)`` — the serve engine's per-request
+  boundaries; raise :class:`RequestPoisoned`.
 * ``page_alloc_should_fail(n)`` — consulted by
   :class:`repro.serve.paged_cache.PageAllocator` before handing out
   pages; True simulates pool pressure.
@@ -146,7 +147,8 @@ class FaultInjector:
                     or (sp.p > 0.0 and self._rand("poison", site, k, rid,
                                                   step) < sp.p)):
                 continue
-            if site == "decode" and sp.steps and step not in sp.steps:
+            if (site in ("decode", "draft") and sp.steps
+                    and step not in sp.steps):
                 continue
             with self._lock:
                 hits = self._poison_hits.get((k, rid), 0)
@@ -164,6 +166,13 @@ class FaultInjector:
         """Raise if ``rid``'s decode ``step`` (1-based token index) is
         poisoned."""
         self._poison(rid, "decode", step)
+
+    def check_draft(self, rid: int, step: int) -> None:
+        """Raise if ``rid``'s draft proposals for the tick that would emit
+        token ``step`` are poisoned.  The speculative engine catches this
+        and degrades the slot's tick to non-speculative decode (k=0): the
+        request survives, it only loses the amortization."""
+        self._poison(rid, "draft", step)
 
     # -------------------------------------------------------- page allocator
 

@@ -23,8 +23,10 @@ spec                injects
                      :class:`repro.core.runtime.pool.WorkerAbort`); the
                      WorkerPool must survive and re-converge
 :class:`PoisonRequest` a per-request failure at the serve engine's
-                     admission or decode boundary (``times`` attempts fail,
-                     then the request behaves — the retry-policy probe)
+                     admission, decode, or draft boundary (``times``
+                     attempts fail, then the request behaves — the
+                     retry-policy probe; a poisoned *draft* degrades the
+                     tick to non-speculative decode instead of failing)
 :class:`PageFailure` a forced page-allocation failure: ``try_alloc``
                      reports pressure even when pages are free (the load-
                      shedding / deferral-aging probe)
@@ -89,15 +91,19 @@ class WorkerCrash:
 
 @dataclasses.dataclass(frozen=True)
 class PoisonRequest:
-    """Fail a serve request at ``site`` (``admission`` | ``decode``).
+    """Fail a serve request at ``site`` (``admission`` | ``decode`` |
+    ``draft``).
 
     Targets the rids in ``rids`` plus others with probability ``p``.  The
     first ``times`` attempts at the site raise
     :class:`~repro.core.faults.injector.RequestPoisoned`; later attempts
     succeed — so ``times <= max_retries`` probes the retry path and
-    ``times`` large forces a terminal FAILED.  For ``site="decode"``,
-    ``steps`` names the decode steps (1-based token index) that fail;
-    empty = the first decode step."""
+    ``times`` large forces a terminal FAILED.  For ``site="decode"`` and
+    ``site="draft"``, ``steps`` names the decode steps (1-based token
+    index) that fail; empty = every step.  ``site="draft"`` poisons the
+    *drafter's* proposals for that slot/tick: the speculative engine
+    degrades the tick to non-speculative decode (k=0) — the request
+    survives, it just loses the amortization."""
 
     rids: Tuple[int, ...] = ()
     p: float = 0.0
@@ -152,10 +158,10 @@ class FaultPlan:
         self.specs = tuple(self.specs)
         for sp in self.specs:
             if isinstance(sp, PoisonRequest) and sp.site not in (
-                    "admission", "decode"):
+                    "admission", "decode", "draft"):
                 raise ValueError(
-                    f"PoisonRequest.site must be 'admission' or 'decode', "
-                    f"got {sp.site!r}")
+                    f"PoisonRequest.site must be 'admission', 'decode' or "
+                    f"'draft', got {sp.site!r}")
 
     def describe(self) -> str:
         """One-line summary for chaos tables / logs."""

@@ -262,6 +262,22 @@ class TuningContext:
             unit_read=4096, unit_write=4096, unit_comp=1024)
         return max(1, self.suggest_block(feats, n=n_requests))
 
+    def draft_span(self, *, acceptance: float = 0.75,
+                   draft_cost_ratio: float = 0.25, max_k: int = 4) -> int:
+        """Draft tokens proposed per verification in speculative serve —
+        the paper's B lever read as an acceptance-span grain, mirroring
+        :meth:`admission_block`.  One verify is the unit of work (priced
+        at this context's calibrated per-item cost); the per-tick host
+        bookkeeping — acceptance scan, length rollback, the shared-counter
+        hits — is priced at the calibrated FAA costs (remote share
+        weighted by the group count, as in ``analytic_cost``)."""
+        verify = max(1e-9, self.per_item_cost)
+        groups = max(1, self.host_groups)
+        sync = self.faa_cost + self.faa_remote_cost * (groups - 1) / groups
+        return cm.best_draft_span(
+            acceptance, draft_cost=draft_cost_ratio * verify,
+            verify_cost=verify + sync, max_k=max_k)
+
     def data_grain(self, n_examples: int, *, host_threads: int = 8,
                    bytes_per_example: int = 4 * 4096) -> int:
         """Host data-pipeline grain under the calibrated weights."""

@@ -244,13 +244,11 @@ def attn_apply(
         length = cache["len"]
         # Per-row cache lengths ([B] vector instead of scalar) are the
         # continuous-batching serve path: every batch slot sits at its own
-        # position after an in-flight refill.  Single-token decode only —
-        # multi-token continuation at mixed offsets has no caller.
+        # position after an in-flight refill.  s == 1 is the decode tick;
+        # s > 1 is the speculative verify step (Model.verify_step): all s
+        # tokens are written at each row's own offset and attention runs
+        # per position so every logit is bit-identical to s == 1 decode.
         per_row = getattr(length, "ndim", 0) == 1
-        if per_row and s != 1:
-            raise ValueError(
-                "per-row cache lengths support single-token decode (s == 1); "
-                f"got a [{s}]-token step")
         if cfg.use_rope:
             if per_row:
                 qpos = length[:, None] + jnp.arange(s)[None, :]
@@ -290,12 +288,18 @@ def attn_apply(
                                  "(run set_cache_lengths / the serve path)")
             pt = cache["pt"]
             ps, pcount = cache["k"].shape[1], pt.shape[1]
-            page = jnp.minimum(length // ps, pcount - 1)
-            phys = jnp.take_along_axis(pt, page[:, None], axis=1)[:, 0]
-            off = length % ps
+            # [B, S] write coordinates: token j of row b lands at logical
+            # position length[b] + j.  Rows whose tables don't cover a
+            # position (idle slots, speculative overflow past the page
+            # budget) resolve to pool page 0 — the reserved scratch page,
+            # whose contents are never read unmasked.
+            steps = length[:, None] + jnp.arange(s)[None, :]
+            page = jnp.minimum(steps // ps, pcount - 1)
+            phys = jnp.take_along_axis(pt, page, axis=1)
+            off = steps % ps
             if quantized:
-                kq_t, ks_t = _quant_tok(k[:, 0], cache["k"], cache["ks"])
-                vq_t, vs_t = _quant_tok(v[:, 0], cache["v"], cache["vs"])
+                kq_t, ks_t = _quant_tok(k, cache["k"], cache["ks"])
+                vq_t, vs_t = _quant_tok(v, cache["v"], cache["vs"])
                 ck = cache["k"].at[phys, off].set(kq_t)
                 cv = cache["v"].at[phys, off].set(vq_t)
                 cks = cache["ks"].at[phys, off].set(ks_t)
@@ -310,9 +314,9 @@ def attn_apply(
                     cvs[pt].reshape(b, pcount * ps, hkv, 1))
             else:
                 ck = cache["k"].at[phys, off].set(
-                    k[:, 0].astype(cache["k"].dtype))
+                    k.astype(cache["k"].dtype))
                 cv = cache["v"].at[phys, off].set(
-                    v[:, 0].astype(cache["v"].dtype))
+                    v.astype(cache["v"].dtype))
                 new_cache = {"k": ck, "v": cv, "pt": pt, "len": length + s}
                 k = ck[pt].reshape(b, pcount * ps, hkv, hd)
                 v = cv[pt].reshape(b, pcount * ps, hkv, hd)
@@ -368,12 +372,27 @@ def attn_apply(
             out = distributed_decode_attention(
                 q[:, 0], k, v, length + s, mesh=pol.mesh)[:, None]
         elif per_row:
-            # s == 1: the causal mask (kpos <= row position) and the valid-
-            # length mask (kpos < length + 1) coincide, so kv_len alone
-            # carries the per-row masking.
-            out = attention(q, k, v, causal=False, block_k=block_k,
-                            kv_len=length + s, q_offset=0,
-                            use_kernel=use_kernel)
+            if s == 1:
+                # the causal mask (kpos <= row position) and the valid-
+                # length mask (kpos < length + 1) coincide, so kv_len alone
+                # carries the per-row masking.
+                out = attention(q, k, v, causal=False, block_k=block_k,
+                                kv_len=length + s, q_offset=0,
+                                use_kernel=use_kernel)
+            else:
+                # Speculative verify: position j must see exactly the KV
+                # set a single-token decode at row length length+j would
+                # see, so run one s==1-shaped attention per position with
+                # kv_len = length + j + 1 and concatenate.  s is static,
+                # so this unrolls under jit; each call is arithmetically
+                # identical to the decode-tick call above, which is what
+                # makes speculative greedy output bit-identical to
+                # non-speculative greedy output.
+                out = jnp.concatenate(
+                    [attention(q[:, j:j + 1], k, v, causal=False,
+                               block_k=block_k, kv_len=length + j + 1,
+                               q_offset=0, use_kernel=use_kernel)
+                     for j in range(s)], axis=1)
         else:
             # causal alignment: query i sits at absolute position length+i,
             # so q_offset is the (dynamic) pre-update cache length.

@@ -426,6 +426,46 @@ class Model:
         logits = self._logits(params, x)[:, 0]
         return logits.astype(jnp.float32), cache
 
+    def verify_step(self, params, tokens, cache):
+        """tokens: [B,S] -> (logits [B,S,V], new cache).
+
+        The multi-token sibling of :meth:`decode_step` for speculative
+        verification: every position's logits are kept, and each position
+        j is computed exactly as an s==1 decode at row length ``len + j``
+        would compute it (see the per-position loop in ``attn_apply``), so
+        greedy argmax over position j is bit-identical to the token a
+        non-speculative decode tick would have produced after consuming
+        ``tokens[:, :j]``.  The cache advances by S per row; the caller
+        rolls back to the accepted length with
+        :meth:`override_cache_lengths`.
+        """
+        if not self.supports_speculation:
+            raise ValueError(
+                f"{self.cfg.name}: family={self.cfg.family}"
+                f"{' (MLA)' if self.cfg.use_mla else ''} cannot verify "
+                "speculatively — rollback requires every cache leaf to be "
+                "a length-masked KV cache (dense, non-MLA)")
+        cfg = self.cfg
+        batch = {"tokens": tokens}
+        x = layers.embed(params["embed"], tokens).astype(cfg.dtype)
+        x, cache, _ = self._backbone(params, x, batch, cache, train=False)
+        x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = self._logits(params, x)
+        return logits.astype(jnp.float32), cache
+
+    @property
+    def supports_speculation(self) -> bool:
+        """Whether this model can act as speculative target or drafter.
+
+        Rollback after partial acceptance is a pure length truncation, so
+        every growing cache leaf must be a length-masked KV cache: dense,
+        non-MLA.  SSM/hybrid recurrent state advances irreversibly (no
+        way to rewind k tokens without replay), and MoE's batch-coupled
+        expert capacity would let one slot's rejected drafts perturb
+        other slots' routing during the multi-token verify — the same
+        up-front rejects as the paged/quantized MoE/MLA paths."""
+        return self.cfg.family == "dense" and not self.cfg.use_mla
+
     # ------------------------------------------- continuous-serving hooks
 
     @property
@@ -480,6 +520,30 @@ class Model:
         def walk(node):
             if isinstance(node, dict):
                 return {k: (jnp.broadcast_to(lengths, v.shape + lengths.shape)
+                            if k == "len" else walk(v))
+                        for k, v in node.items()}
+            return node
+
+        return walk(cache)
+
+    @staticmethod
+    def override_cache_lengths(cache, lengths) -> Any:
+        """Rewrite the per-row ``len`` entries of a *serve-form* cache.
+
+        The speculative rollback primitive: a verify step advanced every
+        row by the full draft span, and the accepted prefix per row is
+        shorter — truncating ``len`` masks the rejected positions, whose
+        garbage K/V contribute exactly ``exp(NEG_INF - m) = 0`` until
+        they are overwritten.  Unlike :meth:`set_cache_lengths` (which
+        *adds* a row axis to scalar-form leaves), this expects ``len``
+        leaves already in per-row form ``[*stack, B]`` and broadcasts the
+        new ``[B]`` vector over the stack dims only.
+        """
+        lengths = jnp.asarray(lengths, jnp.int32)
+
+        def walk(node):
+            if isinstance(node, dict):
+                return {k: (jnp.broadcast_to(lengths, v.shape)
                             if k == "len" else walk(v))
                         for k, v in node.items()}
             return node

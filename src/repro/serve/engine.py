@@ -57,6 +57,30 @@ _SERVABLE = ("dense", "moe", "ssm", "hybrid")
 
 
 @dataclasses.dataclass
+class SpecConfig:
+    """Draft-model speculation for the continuous decode loop.
+
+    A cheap ``draft`` model proposes ``k`` tokens per live slot per tick
+    (sequential drafter decode steps, batched across slots); the target
+    verifies all k+1 positions in ONE batched forward
+    (:meth:`repro.models.model.Model.verify_step`), and greedy acceptance
+    is longest-matching-prefix + one corrected token — so speculative
+    serve output is bit-identical to target-only greedy serve, while one
+    verification amortizes the per-token claim/admission bookkeeping over
+    the whole accepted span (the paper's grain trade at serving
+    granularity).  ``k=None`` resolves from the calibrated
+    ``TuningContext.draft_span`` — mirroring ``admission_block``.
+    Both target and drafter must support rollback-by-length-truncation
+    (``Model.supports_speculation``: dense, non-MLA) and share a vocab;
+    speculation is greedy-only (temperature must be 0).
+    """
+
+    draft: Model
+    draft_params: object
+    k: Optional[int] = None
+
+
+@dataclasses.dataclass
 class ServeConfig:
     max_len: int = 512
     eos_id: int = -1            # -1 = never stops early
@@ -123,6 +147,9 @@ class ServeConfig:
     # (its pages/slots reclaimed) instead of destroying the batch.
     # False restores propagate-everything.
     isolate_failures: bool = True
+    # ---- speculative decoding (continuous mode, greedy only) ----
+    # None = non-speculative decode; see SpecConfig
+    spec: Optional[SpecConfig] = None
 
 
 class Engine:
@@ -144,7 +171,37 @@ class Engine:
         # greedy decode transfers [B] token ids, never [B, vocab] logits
         self._argmax = jax.jit(
             lambda logits: jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        # temperature > 0: one batched categorical per tick over the
+        # per-(request, step) key streams — same [B]-ids-only transfer
+        # contract as _argmax, and sampling is a pure function of
+        # (seed, rid, step), so output cannot depend on admission
+        # interleaving, scheduler policy, or batch composition.
+        temp = cfg.temperature
+
+        def _sample_fn(logits, seed, rids, steps):
+            base = jax.random.PRNGKey(seed)
+
+            def one(row_logits, rid, step):
+                k = jax.random.fold_in(jax.random.fold_in(base, rid), step)
+                return jax.random.categorical(k, row_logits / temp)
+
+            return jax.vmap(one)(logits, rids, steps).astype(jnp.int32)
+
+        self._sample_tokens = jax.jit(_sample_fn) if temp > 0 else None
         self._splice = None     # built lazily (needs the cache axis probe)
+        # ---- speculative decoding (cfg.spec) ----
+        if cfg.spec is not None:
+            draft = cfg.spec.draft
+            self._verify = jax.jit(model.verify_step)
+            self._draft_decode = jax.jit(draft.decode_step)
+            self._draft_prefill_padded = jax.jit(
+                lambda p, toks, lens: draft.prefill_padded(
+                    p, {"tokens": toks, "lengths": lens}, cfg.max_len, kvd))
+            # rollback: rewrite per-row cache lengths from the host-
+            # tracked accepted lengths (pure truncation — rejected
+            # positions stay masked garbage until overwritten)
+            self._set_lens = jax.jit(Model.override_cache_lengths)
+            self._draft_splice = None   # lazy (drafter cache axis probe)
         # the serve cache backend persists across serve() calls so the
         # prefix trie and page pool survive request churn; reset_cache()
         # drops it explicitly
@@ -159,17 +216,33 @@ class Engine:
         self._backend = None
 
     # ------------------------------------------------------------- sampling
+    #
+    # Every sampled token is a pure function of (seed, rid, step):
+    # key = fold_in(fold_in(PRNGKey(seed), rid), step).  generate() and
+    # both serve modes draw from the same streams, so temperature > 0
+    # output is invariant to admission interleaving, scheduler policy,
+    # slot count, and batch composition — the same serve == generate
+    # differential greedy decoding has always had.
 
-    def _sample(self, logits, key):
+    def _pick(self, logits, seed, rids, step):
+        """Next token for every row ([B,V] logits -> [B] ids, one
+        transfer).  ``step`` may be a scalar (generate: all rows at the
+        same step) or a [B] vector (continuous: each slot at its own
+        output length)."""
         if self.cfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
-        return jax.random.categorical(
-            key, logits / self.cfg.temperature, axis=-1)
+            return self._argmax(logits)
+        b = logits.shape[0]
+        steps = jnp.broadcast_to(jnp.asarray(step, jnp.int32), (b,))
+        return self._sample_tokens(logits, seed,
+                                   jnp.asarray(rids, jnp.int32), steps)
 
-    def _sample_row(self, logits_row, key) -> int:
-        """One slot's next token (row logits [V])."""
+    def _sample_row(self, logits_row, seed, rid, step) -> int:
+        """One slot's next token (row logits [V]) — the admission-time
+        single-row case, same (seed, rid, step) stream as _pick."""
         if self.cfg.temperature <= 0.0:
             return int(jnp.argmax(logits_row))
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), rid), step)
         return int(jax.random.categorical(
             key, logits_row / self.cfg.temperature))
 
@@ -183,6 +256,7 @@ class Engine:
         seed: int = 0,
         live: Optional[np.ndarray] = None,
         lengths: Optional[np.ndarray] = None,
+        rids: Optional[Sequence[int]] = None,
     ) -> np.ndarray:
         """batch: family-appropriate dict with "tokens" [B, S_prompt].
         Returns generated tokens [B, max_new_tokens] (eos-padded).
@@ -192,8 +266,13 @@ class Engine:
 
         ``lengths``: optional [B] true prompt lengths for right-padded
         mixed-length batches (pad-masked prefill + per-row cache
-        positions); None keeps the uniform-width prefill."""
-        key = jax.random.PRNGKey(seed)
+        positions); None keeps the uniform-width prefill.
+
+        ``rids``: optional [B] request ids naming each row's sampling
+        stream (temperature > 0 draws key fold_in(seed, rid, step)); None
+        uses row indices.  Rows with the same (seed, rid) sample the same
+        stream regardless of batch composition — this is what makes serve
+        output match per-request generate() at temperature > 0."""
         if lengths is None:
             logits, cache = self._prefill(self.params, batch)
         else:
@@ -201,19 +280,19 @@ class Engine:
                 self.params, batch["tokens"],
                 jnp.asarray(lengths, jnp.int32))
         b = batch["tokens"].shape[0]
+        rids_arr = (np.arange(b, dtype=np.int32) if rids is None
+                    else np.asarray(rids, np.int32))
         out = np.full((b, max_new_tokens), self.cfg.eos_id, np.int32)
         done = (np.zeros((b,), bool) if live is None
                 else ~np.asarray(live, bool))
-        key, k0 = jax.random.split(key)
-        tok = self._sample(logits, k0).astype(jnp.int32)
+        tok = self._pick(logits, seed, rids_arr, 0)
         for t in range(max_new_tokens):
             out[:, t] = np.where(done, self.cfg.eos_id, np.asarray(tok))
             done |= np.asarray(tok) == self.cfg.eos_id
             if done.all():
                 break
             logits, cache = self._decode(self.params, tok[:, None], cache)
-            key, kt = jax.random.split(key)
-            tok = self._sample(logits, kt).astype(jnp.int32)
+            tok = self._pick(logits, seed, rids_arr, t + 1)
         return out
 
     # ---------------------------------------------------------------- serve
@@ -258,6 +337,38 @@ class Engine:
         if self.cfg.deadline_ticks is not None and self.cfg.deadline_ticks < 1:
             raise ValueError(f"ServeConfig.deadline_ticks must be >= 1, "
                              f"got {self.cfg.deadline_ticks}")
+        spec_k = 0
+        spec = self.cfg.spec
+        if spec is not None:
+            # speculation preconditions fail fast, like the moe/MLA paged
+            # and quantized rejects: rollback is a pure length truncation,
+            # so both models must be dense non-MLA, share a vocab, and
+            # decode greedily (acceptance compares argmax streams)
+            if self.cfg.mode != "continuous":
+                raise ValueError(
+                    "ServeConfig.spec needs mode='continuous' (the rounds "
+                    "barrier has no per-slot decode loop to speculate in)")
+            if self.cfg.temperature > 0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: acceptance "
+                    "compares draft/target argmax streams — set "
+                    "temperature=0 or spec=None")
+            for m, role in ((self.model, "target"), (spec.draft, "draft")):
+                if not m.supports_speculation:
+                    raise ValueError(
+                        f"{role} model {m.cfg.name!r} "
+                        f"(family={m.cfg.family}"
+                        f"{', MLA' if m.cfg.use_mla else ''}) cannot "
+                        f"speculate: rollback needs every cache leaf to "
+                        f"be a length-masked KV cache (dense, non-MLA)")
+            if spec.draft.cfg.vocab_size != self.model.cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab ({spec.draft.cfg.vocab_size}) != target "
+                    f"vocab ({self.model.cfg.vocab_size}) — acceptance "
+                    f"compares token ids, the vocabularies must match")
+            spec_k = self._spec_k()
+            if spec_k < 0:
+                raise ValueError(f"SpecConfig.k must be >= 0, got {spec_k}")
         requests = as_requests(prompts)
         for r in requests:
             budget = (max_new_tokens if r.max_new_tokens is None
@@ -267,6 +378,13 @@ class Engine:
                     f"request {r.rid}: prompt ({r.prompt_len}) + token "
                     f"budget ({budget}) exceeds max_len "
                     f"{self.cfg.max_len} — the cache would overflow")
+            if spec_k and r.prompt_len + budget + spec_k - 1 > self.cfg.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt ({r.prompt_len}) + budget "
+                    f"({budget}) + draft span ({spec_k}) - 1 exceeds "
+                    f"max_len {self.cfg.max_len} — a verify step near the "
+                    f"budget would write past the cache; shrink k or "
+                    f"leave k tokens of headroom")
         if self.cfg.cache != "contiguous" and self.cfg.mode != "continuous":
             raise ValueError(
                 f"cache={self.cfg.cache!r} needs mode='continuous' "
@@ -308,6 +426,25 @@ class Engine:
                 lambda c, pc, s: self.model.splice_cache(c, pc, s,
                                                          axes=axes))
 
+    def _ensure_draft_splice(self):
+        if self._draft_splice is None:
+            draft = self.cfg.spec.draft
+            axes = draft.cache_batch_axes(dtype=self.kv_dtype)
+            self._draft_splice = jax.jit(
+                lambda c, pc, s: draft.splice_cache(c, pc, s, axes=axes))
+
+    def _spec_k(self) -> int:
+        """Resolved draft span: explicit SpecConfig.k, or the calibrated
+        grain choice (TuningContext.draft_span — mirroring how
+        admission_block resolves when ServeConfig.admission_block is
+        None).  0 disables speculation for the call."""
+        spec = self.cfg.spec
+        if spec is None:
+            return 0
+        if spec.k is not None:
+            return spec.k
+        return rt.tuning().draft_span()
+
     def _serve_continuous(self, requests: List[Request],
                           max_new_tokens: int, seed: int) -> list:
         cfg = self.cfg
@@ -323,8 +460,27 @@ class Engine:
         tok = np.zeros(cfg.slots, np.int32)
         slot_req: List[Optional[Request]] = [None] * cfg.slots
         slot_cap = np.zeros(cfg.slots, np.int64)
-        slot_key = [None] * cfg.slots
         outputs: List[Optional[list]] = [None] * len(requests)
+        # ---- speculative state (inert when spec_k == 0) ----
+        spec = cfg.spec
+        spec_k = self._spec_k()
+        draft_cache = None
+        # host mirror of each slot's cache length (prompt + emitted - 1:
+        # the last emitted token is never consumed until the next tick) —
+        # the rollback source after each verify advances every row by the
+        # full draft span.  Shared by target and drafter, whose consumed
+        # streams are identical by construction.
+        slot_len = np.zeros(cfg.slots, np.int32)
+        drafted_total = 0
+        accepted_total = 0
+        degraded_ticks = 0
+        decode_slot_ticks = 0
+        if spec_k:
+            self._ensure_draft_splice()
+            draft_cache = spec.draft.set_cache_lengths(
+                spec.draft.init_cache(cfg.slots, cfg.max_len,
+                                      self.kv_dtype),
+                np.zeros(cfg.slots, np.int32))
         telem = {r.rid: RequestTelemetry(rid=r.rid,
                                          prompt_len=r.prompt_len)
                  for r in requests}
@@ -401,6 +557,7 @@ class Engine:
             tm.finish_s = time.monotonic() - t0
             tm.decode_tokens = max(0, len(outputs[req.rid]) - 1)
             slot_req[slot] = None
+            slot_len[slot] = 0
             backend.finish(slot)
             set_terminal(req.rid, "ok")
 
@@ -409,6 +566,7 @@ class Engine:
             discard the partial tokens, and retry or fail the request."""
             req = slot_req[slot]
             slot_req[slot] = None
+            slot_len[slot] = 0
             backend.finish(slot)
             outputs[req.rid] = None
             retry_or_fail(req, reason)
@@ -485,14 +643,24 @@ class Engine:
                 progress = True
                 if req.rid == starving:
                     starving = None
-                key = jax.random.fold_in(jax.random.PRNGKey(seed), req.rid)
-                key, k0 = jax.random.split(key)
-                first = self._sample_row(res.logits_row, k0)
+                first = self._sample_row(res.logits_row, seed, req.rid, 0)
                 slot_req[s] = req
                 slot_cap[s] = cap_of(req)
-                slot_key[s] = key
+                slot_len[s] = req.prompt_len
                 tok[s] = first
                 outputs[req.rid] = [first]
+                if spec_k:
+                    # the drafter consumes the same prompt into its own
+                    # contiguous cache row (its proposals must continue
+                    # exactly the target's stream)
+                    w = self._bucket_width(req.prompt_len)
+                    dtoks = np.zeros((1, w), np.int32)
+                    dtoks[0, : req.prompt_len] = req.prompt
+                    _, dcache = self._draft_prefill_padded(
+                        spec.draft_params, jnp.asarray(dtoks),
+                        jnp.asarray([req.prompt_len], jnp.int32))
+                    draft_cache = self._draft_splice(
+                        draft_cache, dcache, jnp.asarray(s, jnp.int32))
                 tm = telem[req.rid]
                 tm.admit_tick = tick
                 tm.ttft_s = time.monotonic() - t0
@@ -552,30 +720,141 @@ class Engine:
                 # charged to the chaos clock and surfaced in the report's
                 # injected_stall_s — the exposed-wait term
                 engine_stall_s += inj.engine_stall(tick)
-            logits, backend.cache = self._decode(
-                self.params, jnp.asarray(tok)[:, None], backend.cache)
-            tick += 1
-            greedy_toks = (np.asarray(self._argmax(logits))
-                           if cfg.temperature <= 0 else None)
-            for s in live:
-                rid = slot_req[s].rid
-                if inj is not None:
-                    try:
-                        inj.check_decode(rid, len(outputs[rid]))
-                    except Exception as e:
-                        if not cfg.isolate_failures:
-                            raise
-                        cancel(s, f"decode: {type(e).__name__}: {e}")
-                        continue
-                if greedy_toks is not None:
-                    nxt_tok = int(greedy_toks[s])
+            # one unit of per-token decode bookkeeping per (live slot,
+            # tick) — the serving analogue of the per-item FAA the paper
+            # amortizes; speculation emits >1 token per unit
+            decode_slot_ticks += len(live)
+            if spec_k:
+                tick += 1
+                # ---- draft: k sequential batched drafter steps.  Column
+                # 0 is each slot's last emitted (still unconsumed) token;
+                # columns 1..k are the drafter's greedy continuations.
+                draft_block = np.zeros((cfg.slots, spec_k + 1), np.int32)
+                draft_block[:, 0] = tok
+                dtok = jnp.asarray(tok)[:, None]
+                for j in range(1, spec_k + 1):
+                    dlogits, draft_cache = self._draft_decode(
+                        spec.draft_params, dtok, draft_cache)
+                    dtok = self._argmax(dlogits)[:, None]
+                    draft_block[:, j] = np.asarray(dtok)[:, 0]
+                # ---- verify all k+1 positions in one batched forward;
+                # greedy[s, j] is exactly the token a non-speculative
+                # decode tick would emit after consuming draft_block[s,
+                # :j+1] (per-position attention in attn_apply)
+                vlogits, backend.cache = self._verify(
+                    self.params, jnp.asarray(draft_block), backend.cache)
+                greedy = np.asarray(self._argmax(vlogits))
+                # ---- host acceptance: longest matching prefix + one
+                # corrected token, capped by remaining budget, cut at eos
+                decisions = {}
+                full_accept = False
+                for s in live:
+                    rid = slot_req[s].rid
+                    degraded = False
+                    if inj is not None:
+                        try:
+                            inj.check_draft(rid, len(outputs[rid]))
+                        except Exception as e:
+                            if not cfg.isolate_failures:
+                                raise
+                            # poisoned draft: degrade this slot's tick to
+                            # non-speculative decode (accept nothing, emit
+                            # only the corrected token) — the request
+                            # survives, it just loses the amortization
+                            degraded = True
+                    m = 0
+                    if not degraded:
+                        while (m < spec_k and int(draft_block[s, m + 1])
+                               == int(greedy[s, m])):
+                            m += 1
+                    if m == spec_k:
+                        full_accept = True
+                    rem = int(slot_cap[s]) - len(outputs[rid])
+                    emit = [int(t) for t in greedy[s, : min(m + 1, rem)]]
+                    for ei, t in enumerate(emit):
+                        if t == cfg.eos_id:
+                            emit = emit[: ei + 1]
+                            break
+                    decisions[s] = (emit, degraded)
+                if full_accept:
+                    # resync: a fully accepted row's drafter never
+                    # consumed its own k-th proposal; one extra batched
+                    # step feeds it (the length rollback right below
+                    # masks this step for every other row)
+                    _, draft_cache = self._draft_decode(
+                        spec.draft_params,
+                        jnp.asarray(draft_block[:, -1:]), draft_cache)
+                for s, (emit, _) in decisions.items():
+                    slot_len[s] += len(emit)
+                # ---- rollback: both caches truncate to the accepted
+                # lengths; rejected positions become masked garbage
+                # (exactly zero attention weight) until overwritten
+                lens = jnp.asarray(slot_len, jnp.int32)
+                backend.cache = self._set_lens(backend.cache, lens)
+                draft_cache = self._set_lens(draft_cache, lens)
+                for s in live:
+                    rid = slot_req[s].rid
+                    emit, degraded = decisions[s]
+                    tm = telem[rid]
+                    tm.drafted_tokens += spec_k
+                    tm.accepted_tokens += len(emit) - 1
+                    drafted_total += spec_k
+                    accepted_total += len(emit) - 1
+                    if degraded:
+                        degraded_ticks += 1
+                    if inj is not None:
+                        cancelled = False
+                        base = len(outputs[rid])
+                        for off in range(len(emit)):
+                            try:
+                                inj.check_decode(rid, base + off)
+                            except Exception as e:
+                                if not cfg.isolate_failures:
+                                    raise
+                                cancel(s,
+                                       f"decode: {type(e).__name__}: {e}")
+                                cancelled = True
+                                break
+                        if cancelled:
+                            continue
+                    outputs[rid].extend(emit)
+                    tok[s] = emit[-1]
+                    if (emit[-1] == cfg.eos_id
+                            or len(outputs[rid]) >= slot_cap[s]):
+                        finish(s)
+            else:
+                logits, backend.cache = self._decode(
+                    self.params, jnp.asarray(tok)[:, None], backend.cache)
+                tick += 1
+                if cfg.temperature <= 0:
+                    next_toks = np.asarray(self._argmax(logits))
                 else:
-                    slot_key[s], kt = jax.random.split(slot_key[s])
-                    nxt_tok = self._sample_row(logits[s], kt)
-                tok[s] = nxt_tok
-                outputs[rid].append(nxt_tok)
-                if nxt_tok == cfg.eos_id or len(outputs[rid]) >= slot_cap[s]:
-                    finish(s)
+                    # batched per-(request, step) sampling: one transfer
+                    # per tick ([B] ids), never a per-slot host sync
+                    rids_b = np.zeros(cfg.slots, np.int32)
+                    steps_b = np.zeros(cfg.slots, np.int32)
+                    for s in live:
+                        rids_b[s] = slot_req[s].rid
+                        steps_b[s] = len(outputs[slot_req[s].rid])
+                    next_toks = np.asarray(self._sample_tokens(
+                        logits, seed, jnp.asarray(rids_b),
+                        jnp.asarray(steps_b)))
+                for s in live:
+                    rid = slot_req[s].rid
+                    if inj is not None:
+                        try:
+                            inj.check_decode(rid, len(outputs[rid]))
+                        except Exception as e:
+                            if not cfg.isolate_failures:
+                                raise
+                            cancel(s, f"decode: {type(e).__name__}: {e}")
+                            continue
+                    nxt_tok = int(next_toks[s])
+                    tok[s] = nxt_tok
+                    outputs[rid].append(nxt_tok)
+                    if (nxt_tok == cfg.eos_id
+                            or len(outputs[rid]) >= slot_cap[s]):
+                        finish(s)
             if cfg.deadline_ticks is not None:
                 for s in range(cfg.slots):
                     req = slot_req[s]
@@ -622,6 +901,11 @@ class Engine:
         rep.injected_stall_s = (
             engine_stall_s + queue.plan.stats.injected_stall_s
             + sum(st.injected_stall_s for st in rep.page_alloc_stats))
+        rep.spec_k = spec_k
+        rep.drafted_tokens = drafted_total
+        rep.accepted_tokens = accepted_total
+        rep.draft_degraded_ticks = degraded_ticks
+        rep.decode_slot_ticks = decode_slot_ticks
         return results
 
     # --------------------------------------------- legacy round barrier
@@ -641,7 +925,6 @@ class Engine:
                  for r in requests}
         t0 = time.monotonic()
         tick = 0
-        round_idx = 0
         total_tokens = 0
         while pending:
             if self.model.pad_safe_prefill:
@@ -677,12 +960,16 @@ class Engine:
                 pack, len(round_reqs),
                 n_threads=max(1, min(cfg.refill_threads, len(round_reqs))),
                 schedule=cfg.refill_schedule, block_size=1, layer="serve"))
-            # fresh randomness per round: otherwise temperature sampling
-            # replays the identical key stream every round
+            # each row samples its request's own (seed, rid, step) stream,
+            # so rounds-mode temperature output matches per-request
+            # generate() and the continuous mode exactly (padding rows
+            # reuse rid 0; they start dead and never emit)
             live = np.arange(cfg.slots) < len(round_reqs)
+            rids = [r.rid for r in round_reqs]
+            rids += [0] * (cfg.slots - len(rids))
             out = self.generate({"tokens": tokens}, round_new,
-                                seed=seed + round_idx, live=live,
-                                lengths=lengths)
+                                seed=seed, live=live,
+                                lengths=lengths, rids=rids)
             now = time.monotonic() - t0
             for j, r in enumerate(round_reqs):
                 arr = out[j][: caps[j]].copy()  # eos-padded by generate()
@@ -700,7 +987,6 @@ class Engine:
                 tm.decode_tokens = max(0, emitted - 1)
                 total_tokens += emitted
             tick += round_new
-            round_idx += 1
         self.last_report = ServeReport(
             schedule=cfg.refill_schedule
             if isinstance(cfg.refill_schedule, str)

@@ -42,6 +42,9 @@ class RequestTelemetry:
     status: str = "ok"
     fail_reason: str = ""         # why a failed/shed request ended
     retries: int = 0              # re-admissions after cancel/poison
+    # ---- speculative-decoding telemetry (zeros when speculation is off) ----
+    drafted_tokens: int = 0       # drafter proposals made for this request
+    accepted_tokens: int = 0      # proposals emitted (matched target greedy)
 
     @property
     def queue_wait_ticks(self) -> int:
@@ -96,6 +99,41 @@ class ServeReport:
     # ParallelFors — the measured analogue of the cost model's
     # contention/FAA-wait term (see docs/robustness.md)
     injected_stall_s: float = 0.0
+    # ----- speculative-decoding telemetry (zeros when speculation is off) ----
+    spec_k: int = 0                 # draft span (0 = non-speculative run)
+    drafted_tokens: int = 0         # drafter proposals across the run
+    accepted_tokens: int = 0        # proposals emitted (matched target greedy)
+    draft_degraded_ticks: int = 0   # (slot, tick) pairs degraded to k=0
+    # (live slot, tick) pairs: each is one unit of per-token decode
+    # bookkeeping — the slot's claim on the tick, the serving analogue of
+    # the per-item FAA.  Speculation emits >1 token per pair; that ratio
+    # is the paper's amortization, measured (see faa_per_token).
+    decode_slot_ticks: int = 0
+
+    @property
+    def wasted_tokens(self) -> int:
+        """Drafted but rejected proposals: drafted = accepted + wasted."""
+        return self.drafted_tokens - self.accepted_tokens
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafter proposals the target verified and emitted."""
+        if self.drafted_tokens == 0:
+            return float("nan")
+        return self.accepted_tokens / self.drafted_tokens
+
+    @property
+    def faa_per_token(self) -> float:
+        """Shared-counter hits + per-slot-tick bookkeeping per emitted
+        token — the amortization headline: admission FAAs, page-claim
+        FAAs, and one decode bookkeeping event per (live slot, tick).
+        Non-speculative decode pays >= 1 per token by construction;
+        speculation divides the slot-tick term by the accepted span."""
+        if self.total_tokens == 0:
+            return float("nan")
+        ops = ((self.admission.faa_total if self.admission else 0)
+               + self.page_alloc_faa_total + self.decode_slot_ticks)
+        return ops / self.total_tokens
 
     @property
     def page_alloc_faa_shared(self) -> int:
@@ -166,4 +204,14 @@ class ServeReport:
             "shed": self.shed_requests,
             "retries": self.retries,
             "injected_stall_s": round(self.injected_stall_s, 4),
+            "spec_k": self.spec_k,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "wasted_tokens": self.wasted_tokens,
+            "acceptance_rate": round(self.acceptance_rate, 4)
+                               if self.drafted_tokens else float("nan"),
+            "decode_slot_ticks": self.decode_slot_ticks,
+            "faa_per_token": round(self.faa_per_token, 4)
+                             if self.total_tokens else float("nan"),
+            "draft_degraded_ticks": self.draft_degraded_ticks,
         }

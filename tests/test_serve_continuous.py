@@ -222,3 +222,57 @@ def test_temperature_sampling_deterministic_per_seed(dense_setup,
     b = eng.serve(mixed_prompts[:3], 3, seed=7)
     for x, y in zip(a, b):
         np.testing.assert_array_equal(x, y)
+
+
+def test_temperature_serve_matches_solo_generate(dense_setup,
+                                                 mixed_prompts):
+    """The determinism bugfix's differential: at temperature > 0 every
+    sampled token is a pure function of (seed, rid, step), so serve
+    output equals per-request generate() run with that request's rid —
+    batch composition and slot timing cannot leak into the stream."""
+    cfg, model, params = dense_setup
+    eng = Engine(model, params,
+                 ServeConfig(max_len=48, slots=2, refill_schedule="faa",
+                             temperature=0.8))
+    outs = eng.serve(mixed_prompts, 4, seed=11)
+    for i, p in enumerate(mixed_prompts):
+        solo = eng.generate({"tokens": np.asarray(p)[None, :]}, 4,
+                            seed=11, rids=[i])
+        np.testing.assert_array_equal(solo[0], outs[i])
+
+
+def test_temperature_admission_order_invariant(dense_setup,
+                                               mixed_prompts):
+    """Sampled output must be invariant to admission order: the same
+    requests under every policy and slot count draw from identical
+    per-(rid, step) key streams."""
+    cfg, model, params = dense_setup
+    baseline = None
+    for policy in ("faa", "stealing", "hierarchical"):
+        for slots in (2, 3):
+            eng = Engine(model, params,
+                         ServeConfig(max_len=48, slots=slots,
+                                     refill_schedule=policy,
+                                     temperature=0.8))
+            outs = eng.serve(mixed_prompts, 3, seed=5)
+            if baseline is None:
+                baseline = outs
+            for a, b in zip(baseline, outs):
+                np.testing.assert_array_equal(a, b)
+
+
+def test_temperature_rounds_matches_continuous(dense_setup,
+                                               mixed_prompts):
+    """The rounds fallback samples the same per-(rid, step) streams —
+    no more per-round seed offsets that made the two modes diverge."""
+    cfg, model, params = dense_setup
+    cont = Engine(model, params,
+                  ServeConfig(max_len=48, slots=2, refill_schedule="faa",
+                              temperature=0.8))
+    rounds = Engine(model, params,
+                    ServeConfig(max_len=48, slots=2, refill_schedule="faa",
+                                temperature=0.8, mode="rounds"))
+    a = cont.serve(mixed_prompts[:4], 3, seed=9)
+    b = rounds.serve(mixed_prompts[:4], 3, seed=9)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)

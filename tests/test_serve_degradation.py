@@ -134,6 +134,28 @@ def test_poisoned_decode_cancels_mid_stream(setup):
     _assert_survivors_identical(ref, out, rep)
 
 
+def test_zero_budget_requests_terminal_ok_under_chaos(setup):
+    """max_new_tokens=0 is the degenerate edge of the terminal-status
+    partition: the request admits, emits nothing, and goes terminal ok
+    at its admission tick — even while poison fails a sibling.  No
+    status is lost, none is assigned twice."""
+    model, params, base = setup
+    reqs = [Request(i, p, max_new_tokens=(0 if i in (1, 4) else None))
+            for i, p in enumerate(base)]
+    ref, _ = _serve(setup, prompts=reqs)
+    plan = FaultPlan(seed=1, specs=[PoisonRequest(rids=(2,))])
+    out, rep = _serve(setup, plan, prompts=reqs)
+    _check_partition(rep)
+    by_rid = {t.rid: t for t in rep.requests}
+    for rid in (1, 4):
+        assert out[rid].shape == (0,)
+        assert by_rid[rid].status == "ok"
+        assert by_rid[rid].finish_tick == by_rid[rid].admit_tick
+        assert by_rid[rid].decode_tokens == 0
+    assert by_rid[2].status == "failed"
+    _assert_survivors_identical(ref, out, rep)
+
+
 def test_isolation_off_restores_propagate_everything(setup):
     plan = FaultPlan(seed=1, specs=[PoisonRequest(rids=(2,))])
     with pytest.raises(faults.RequestPoisoned):

@@ -1,0 +1,329 @@
+"""Speculative decoding differential gate.
+
+The tentpole invariant: speculative serve output is **bit-identical** to
+target-only greedy serve — acceptance is longest-matching-prefix against
+the target's own argmax stream, verification replays exactly the
+arithmetic a non-speculative decode tick would run, and rollback is a
+pure cache-length truncation.  Every test here hard-asserts that
+identity across cache backends, admission policies, drafters, eos early
+exit, and injected faults, plus the bookkeeping identity
+(drafted = accepted + wasted) and the amortization headline
+(FAA-per-token strictly below the 1-per-token baseline at perfect
+acceptance).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core import faults
+from repro.core import runtime as rt
+from repro.core.faults import DecodeStall, FaultPlan, PoisonRequest
+from repro.core.schedulers import available_schedulers
+from repro.models import Model
+from repro.serve.engine import Engine, ServeConfig, SpecConfig
+from repro.serve.queue import Request
+
+MAX_NEW = 6
+K = 3
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    faults.clear()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2.5-3b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dcfg = get_config("granite-3-2b").reduced()
+    draft = Model(dcfg)
+    dparams = draft.init(jax.random.PRNGKey(1))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+               for l in [8, 8, 5, 8, 5, 11, 3]]
+    return model, params, draft, dparams, prompts
+
+
+def _engine(setup, *, spec=None, cache="contiguous", **kw):
+    model, params, _, _, _ = setup
+    kw.setdefault("max_len", 48)
+    kw.setdefault("slots", 2)
+    kw.setdefault("refill_schedule", "faa")
+    if cache == "paged":
+        kw.setdefault("page_size", 8)
+        kw.setdefault("prefix_cache", False)
+    return Engine(model, params,
+                  ServeConfig(cache=cache, spec=spec, **kw))
+
+
+def _self_spec(setup, k=K):
+    model, params, _, _, _ = setup
+    return SpecConfig(draft=model, draft_params=params, k=k)
+
+
+def _cold_spec(setup, k=K):
+    _, _, draft, dparams, _ = setup
+    return SpecConfig(draft=draft, draft_params=dparams, k=k)
+
+
+# ------------------------------------------------------------ bit identity
+
+@pytest.mark.parametrize("cache", ["contiguous", "paged"])
+@pytest.mark.parametrize("drafter", ["self", "cold"])
+def test_spec_bit_identical_to_greedy(setup, cache, drafter):
+    """The tentpole: speculative output equals non-speculative greedy
+    output bit for bit, on both cache backends, whether the drafter
+    agrees perfectly (self) or mostly disagrees (cold)."""
+    prompts = setup[4]
+    ref = _engine(setup, cache=cache).serve(prompts, MAX_NEW)
+    spec = (_self_spec if drafter == "self" else _cold_spec)(setup)
+    eng = _engine(setup, spec=spec, cache=cache)
+    out = eng.serve(prompts, MAX_NEW)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    rep = eng.last_report
+    assert rep.spec_k == K
+    assert rep.drafted_tokens == rep.accepted_tokens + rep.wasted_tokens
+    assert rep.drafted_tokens > 0
+    if drafter == "self":
+        # the self-drafter proposes the target's own stream: nothing it
+        # proposed within budget is ever rejected
+        assert rep.wasted_tokens < rep.drafted_tokens
+
+
+def test_spec_bit_identical_under_every_policy(setup):
+    """Admission order is policy-shaped; outputs must not be.  Every
+    registered scheduler drives the speculative engine to the same
+    tokens as the non-speculative faa baseline."""
+    prompts = setup[4]
+    ref = _engine(setup).serve(prompts, MAX_NEW)
+    for policy in available_schedulers():
+        eng = _engine(setup, spec=_self_spec(setup),
+                      refill_schedule=policy)
+        out = eng.serve(prompts, MAX_NEW)
+        for a, b in zip(ref, out):
+            np.testing.assert_array_equal(a, b)
+        assert eng.refill_stats[0].schedule == policy
+
+
+def test_spec_eos_early_exit_matches_greedy(setup):
+    """Mid-span eos: the accepted span is cut at the first eos the
+    target emits, the request exits early, and the padded tail matches
+    the non-speculative run exactly."""
+    model, params, _, _, prompts = setup
+    probe = _engine(setup).generate(
+        {"tokens": np.asarray(prompts[0])[None, :]}, MAX_NEW)
+    eos = int(probe[0, 1])      # emitted at step 1 -> cut inside a span
+    ref = _engine(setup, eos_id=eos).serve(prompts, MAX_NEW)
+    eng = _engine(setup, spec=_self_spec(setup), eos_id=eos)
+    out = eng.serve(prompts, MAX_NEW)
+    stopped_early = 0
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+        hits = np.nonzero(b == eos)[0]
+        if hits.size and hits[0] < MAX_NEW - 1:
+            stopped_early += 1
+            assert (b[hits[0]:] == eos).all()
+    assert stopped_early >= 1
+
+
+@pytest.mark.parametrize("k", [0, 1, 4])
+def test_spec_every_span_is_exact(setup, k):
+    """k is a pure performance knob: every span (including the k=0
+    degenerate non-speculative path through the spec branch) yields the
+    same tokens."""
+    prompts = setup[4]
+    ref = _engine(setup).serve(prompts, MAX_NEW)
+    eng = _engine(setup, spec=_cold_spec(setup, k=k))
+    out = eng.serve(prompts, MAX_NEW)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    assert eng.last_report.spec_k == k
+
+
+def test_spec_k_none_resolves_from_calibrator(setup):
+    """SpecConfig.k=None defers the grain choice to the calibrated cost
+    model (TuningContext.draft_span), mirroring admission_block=None."""
+    prompts = setup[4]
+    spec = _self_spec(setup, k=None)
+    eng = _engine(setup, spec=spec)
+    assert eng._spec_k() == rt.tuning().draft_span()
+    ref = _engine(setup).serve(prompts, MAX_NEW)
+    out = eng.serve(prompts, MAX_NEW)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    assert eng.last_report.spec_k == rt.tuning().draft_span()
+
+
+# ----------------------------------------------------------- amortization
+
+def test_spec_amortizes_faa_per_token(setup):
+    """The paper's headline at decode granularity: one verify tick
+    amortizes the per-(slot, tick) bookkeeping over the accepted span,
+    so the self-drafter's FAA-per-token beats the baseline strictly."""
+    prompts = setup[4]
+    base = _engine(setup)
+    base.serve(prompts, MAX_NEW)
+    base_rep = base.last_report
+    eng = _engine(setup, spec=_self_spec(setup))
+    eng.serve(prompts, MAX_NEW)
+    rep = eng.last_report
+    assert rep.total_tokens == base_rep.total_tokens
+    assert rep.faa_per_token < base_rep.faa_per_token
+    assert rep.decode_slot_ticks < base_rep.decode_slot_ticks
+    assert 0.0 < rep.acceptance_rate <= 1.0
+
+
+# ----------------------------------------------------------- fault paths
+
+def test_poisoned_draft_degrades_not_fails(setup):
+    """A poisoned drafter costs amortization, never correctness: every
+    affected tick degrades to k=0 decode, no request fails, and the
+    output stays bit-identical to the fault-free run."""
+    prompts = setup[4]
+    ref = _engine(setup).serve(prompts, MAX_NEW)
+    plan = FaultPlan(seed=3, specs=(
+        PoisonRequest(rids=(0, 2), site="draft"),))
+    eng = _engine(setup, spec=_self_spec(setup))
+    with faults.fault_scope(plan):
+        out = eng.serve(prompts, MAX_NEW)
+    rep = eng.last_report
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    assert rep.failed_requests == 0 and rep.shed_requests == 0
+    assert rep.draft_degraded_ticks > 0
+    assert rep.drafted_tokens == rep.accepted_tokens + rep.wasted_tokens
+
+
+def test_decode_stall_leaves_spec_output_exact(setup):
+    """An injected straggler decode tick charges the stall ledger but
+    cannot perturb the accepted tokens."""
+    prompts = setup[4]
+    ref = _engine(setup).serve(prompts, MAX_NEW)
+    plan = FaultPlan(seed=5, specs=(
+        DecodeStall(ticks=(1, 2, 3), duration_s=0.001),))
+    eng = _engine(setup, spec=_self_spec(setup))
+    with faults.fault_scope(plan):
+        out = eng.serve(prompts, MAX_NEW)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    assert eng.last_report.injected_stall_s > 0
+
+
+def test_poisoned_decode_fails_only_victim_under_spec(setup):
+    """A decode-poisoned request cancels mid-span and goes terminal
+    FAILED (retry budget 0); the survivors' speculative outputs stay
+    bit-identical to the fault-free run."""
+    prompts = setup[4]
+    ref = _engine(setup).serve(prompts, MAX_NEW)
+    plan = FaultPlan(seed=7, specs=(
+        PoisonRequest(rids=(2,), site="decode", steps=(2,)),))
+    eng = _engine(setup, spec=_self_spec(setup))
+    with faults.fault_scope(plan):
+        out = eng.serve(prompts, MAX_NEW)
+    rep = eng.last_report
+    by_rid = {t.rid: t for t in rep.requests}
+    assert by_rid[2].status == "failed"
+    assert rep.failed_requests == 1
+    for rid, (a, b) in enumerate(zip(ref, out)):
+        if rid != 2:
+            np.testing.assert_array_equal(a, b)
+    # exactly one terminal status each — the no-lost-request partition
+    assert all(t.status in ("ok", "failed") for t in rep.requests)
+    assert rep.ok_requests + rep.failed_requests == rep.n_requests
+
+
+# ------------------------------------------------------------- edge cases
+
+def test_zero_budget_request_terminal_ok_under_spec(setup):
+    """max_new_tokens=0 is a valid degenerate request: empty output,
+    terminal ok at its admission tick, no drafter work charged — in both
+    the speculative and plain engines."""
+    prompts = setup[4]
+    reqs = [Request(i, p, max_new_tokens=(0 if i in (1, 4) else None))
+            for i, p in enumerate(prompts)]
+    for spec in (None, _self_spec(setup)):
+        eng = _engine(setup, spec=spec)
+        out = eng.serve(reqs, MAX_NEW)
+        rep = eng.last_report
+        by_rid = {t.rid: t for t in rep.requests}
+        for rid in (1, 4):
+            assert out[rid].shape == (0,)
+            assert by_rid[rid].status == "ok"
+            assert by_rid[rid].finish_tick == by_rid[rid].admit_tick
+            assert by_rid[rid].drafted_tokens == 0
+        assert rep.failed_requests == 0
+        assert rep.ok_requests == len(prompts)
+
+
+# ------------------------------------------------------------- validation
+
+def test_spec_rejects_temperature(setup):
+    eng = _engine(setup, spec=_self_spec(setup), temperature=0.5)
+    with pytest.raises(ValueError, match="greedy-only"):
+        eng.serve(setup[4][:2], 2)
+
+
+def test_spec_rejects_rounds_mode(setup):
+    eng = _engine(setup, spec=_self_spec(setup), mode="rounds")
+    with pytest.raises(ValueError, match="continuous"):
+        eng.serve(setup[4][:2], 2)
+
+
+def test_spec_rejects_non_rollback_families(setup):
+    """Rollback is a cache-length truncation; families whose state is
+    not a length-masked KV cache (SSM recurrence, MLA latents) are
+    rejected up front, as drafter or as target."""
+    model, params, _, _, prompts = setup
+    ssm_cfg = get_config("mamba2-780m").reduced()
+    ssm = Model(ssm_cfg)
+    assert not ssm.supports_speculation
+    sparams = ssm.init(jax.random.PRNGKey(2))
+    eng = _engine(setup, spec=SpecConfig(draft=ssm, draft_params=sparams,
+                                         k=K))
+    with pytest.raises(ValueError, match="cannot speculate"):
+        eng.serve(prompts[:2], 2)
+    mla_cfg = get_config("deepseek-v2-lite-16b").reduced()
+    mla = Model(mla_cfg)
+    assert not mla.supports_speculation
+    mparams = mla.init(jax.random.PRNGKey(3))
+    eng = Engine(mla, mparams, ServeConfig(
+        max_len=48, slots=2,
+        spec=SpecConfig(draft=model, draft_params=params, k=K)))
+    with pytest.raises(ValueError, match="cannot speculate"):
+        eng.serve(prompts[:2], 2)
+
+
+def test_spec_rejects_vocab_mismatch(setup):
+    model, params, _, _, prompts = setup
+    small = dataclasses.replace(get_config("granite-3-2b").reduced(),
+                                vocab_size=model.cfg.vocab_size // 2)
+    draft = Model(small)
+    dparams = draft.init(jax.random.PRNGKey(4))
+    eng = _engine(setup, spec=SpecConfig(draft=draft,
+                                         draft_params=dparams, k=K))
+    with pytest.raises(ValueError, match="vocab"):
+        eng.serve(prompts[:2], 2)
+
+
+def test_spec_rejects_missing_headroom(setup):
+    """prompt + budget + k - 1 must fit max_len: a verify step near the
+    budget would otherwise write past the cache."""
+    model, params, _, _, _ = setup
+    eng = Engine(model, params, ServeConfig(
+        max_len=16, slots=2, spec=_self_spec(setup)))
+    prompt = np.arange(1, 9, dtype=np.int32)        # 8 + 8 == max_len
+    with pytest.raises(ValueError, match="draft span"):
+        eng.serve([prompt], 8)
+    # the same request is fine without speculation
+    out = Engine(model, params, ServeConfig(
+        max_len=16, slots=2)).serve([prompt], 8)
+    assert out[0].shape == (8,)
